@@ -1,0 +1,34 @@
+"""Paper Fig. 7: sum aggregations over a Gram matrix XᵀX.
+
+(a) Γsum,r(XᵀX): aggregation pushdown under matmul (Eq. 8) — the optimized
+    plan computes Xᵀ×(X×1) instead of materializing the Gram matrix.
+(b) Γsum,d(XᵀX): trace rewrite (Eq. 11) — Γsum,a(X∗X), no matmul at all.
+"""
+import numpy as np
+
+from benchmarks.common import row, sparse, timeit
+from repro.core import Session
+
+
+def run(rng) -> None:
+    for tag, (m, n, dens) in {
+        "u4k": (4000, 2000, 1e-3),
+        "d1k": (1200, 600, 1.0),
+    }.items():
+        x = sparse(rng, m, n, dens) if dens < 1 else \
+            rng.normal(size=(m, n)).astype(np.float32)
+        s = Session()
+        X = s.load(x, f"X_{tag}")
+
+        for which, mx in (("sum_r", X.t().multiply(X).sum("r")),
+                          ("trace", X.t().multiply(X).trace())):
+            t_opt = timeit(lambda mx=mx: mx.collect(optimize=True).value)
+            t_naive = timeit(
+                lambda mx=mx: mx.collect(optimize=False).value)
+            est = mx.optimized_plan().speedup_estimate
+            row(f"fig7_{which}_{tag}_opt", t_opt,
+                f"speedup={t_naive / t_opt:.1f}x est={est:.0f}x")
+            row(f"fig7_{which}_{tag}_naive", t_naive, "")
+            got = np.asarray(mx.collect(optimize=True).value)
+            want = np.asarray(mx.collect(optimize=False).value)
+            assert np.allclose(got, want, rtol=1e-2, atol=1e-2), which

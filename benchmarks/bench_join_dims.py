@@ -1,0 +1,41 @@
+"""Paper Fig. 10: joins on two dimensions (direct / transpose overlay).
+
+Sparse block-skip execution vs the dense straw man, plus the partitioner's
+scheme choice for each case (the distributed collective-bytes validation of
+the cost model lives in bench_join_single's subprocess dry-run).
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, sparse, timeit
+from repro.core import cost as costmod
+from repro.core.joins import join_dense, join_sparse
+from repro.core.matrix import BlockMatrix
+from repro.core.predicates import parse_join
+from repro.core.sparsity import product_merge
+
+
+def run(rng) -> None:
+    m = n = 3000
+    a = sparse(rng, m, n, 1e-3)
+    b = sparse(rng, m, n, 1e-3)
+    bma = BlockMatrix.from_dense(jnp.asarray(a), 256)
+    bmb = BlockMatrix.from_dense(jnp.asarray(b), 256)
+    merge = product_merge()
+
+    for tag, pred_s in (("direct", "RID=RID AND CID=CID"),
+                        ("transpose", "RID=CID AND CID=RID")):
+        pred = parse_join(pred_s)
+        t_opt = timeit(lambda: join_sparse(bma, bmb, pred, merge).value)
+        t_naive = timeit(lambda: join_dense(jnp.asarray(a), jnp.asarray(b),
+                                            pred, merge))
+        choice = costmod.assign_schemes(pred, float((a != 0).sum()),
+                                        float((b != 0).sum()), 256)
+        row(f"fig10_{tag}_overlay_opt", t_opt,
+            f"speedup={t_naive / t_opt:.1f}x "
+            f"schemes=({choice.scheme_a},{choice.scheme_b}) "
+            f"comm={choice.comm_cost:.3g}")
+        row(f"fig10_{tag}_overlay_naive", t_naive, "")
+        got = join_sparse(bma, bmb, pred, merge).value
+        want = join_dense(jnp.asarray(a), jnp.asarray(b), pred, merge)
+        assert np.allclose(np.asarray(got), np.asarray(want), atol=1e-4)

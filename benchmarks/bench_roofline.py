@@ -1,0 +1,37 @@
+"""Roofline report: aggregates the dry-run cell JSONs into the §Roofline
+table rows (per arch × shape × mesh; compute/memory/collective seconds,
+dominant term, usefulness ratio, MFU)."""
+import json
+import os
+
+from benchmarks.common import row
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_OUT", "results/dryrun")
+
+
+def run(rng=None) -> None:
+    if not os.path.isdir(DRYRUN_DIR):
+        row("roofline", None, "no dry-run results yet; run "
+            "`python -m repro.launch.dryrun`")
+        return
+    files = sorted(f for f in os.listdir(DRYRUN_DIR) if f.endswith(".json"))
+    n_ok = n_skip = n_err = 0
+    for fn in files:
+        with open(os.path.join(DRYRUN_DIR, fn)) as f:
+            res = json.load(f)
+        tag = f"{res['arch']}__{res['shape']}__{res['mesh']}"
+        if res["status"] == "ok":
+            n_ok += 1
+            r = res["roofline"]
+            row(f"roofline_{tag}", None,
+                f"dom={r['dominant']} comp={r['compute_s']:.3e}s "
+                f"mem={r['memory_s']:.3e}s coll={r['collective_s']:.3e}s "
+                f"mfu={r['mfu']:.4f} useful={r['usefulness']:.2f}")
+        elif res["status"] == "skipped":
+            n_skip += 1
+            row(f"roofline_{tag}", None, res["reason"])
+        else:
+            n_err += 1
+            row(f"roofline_{tag}", None, "ERROR")
+    row("roofline_summary", None,
+        f"ok={n_ok} skipped={n_skip} errors={n_err}")

@@ -1,0 +1,42 @@
+"""Paper Figs. 8–9: selection pushdown in least-squares linear regression.
+
+Fig. 8: σ_RID=i(b̂) where b̂ = (XᵀX)⁻¹ × Xᵀ × y — matmul-chain ordering (the
+vector product first) + row-select pushdown.
+Fig. 9: σ_{RID=i∧CID=j}(XᵀX) → (σ_CID=i X)ᵀ × σ_CID=j X (vector inner
+product instead of the full Gram matrix).
+"""
+import numpy as np
+
+from benchmarks.common import row, sparse, timeit
+from repro.core import Session
+
+
+def run(rng) -> None:
+    m, n = 3000, 800
+    x = sparse(rng, m, n, 5e-3)
+    y = rng.normal(size=(m, 1)).astype(np.float32)
+    s = Session()
+    X, Y = s.load(x, "X"), s.load(y, "y")
+
+    # Fig. 8: row of the LR coefficients
+    bhat_row = X.t().multiply(X).inverse().multiply(X.t()).multiply(Y) \
+        .select("RID=5")
+    t_opt = timeit(lambda: bhat_row.collect(optimize=True).value, repeats=2)
+    t_naive = timeit(lambda: bhat_row.collect(optimize=False).value,
+                     repeats=2)
+    row("fig8_lr_row_opt", t_opt, f"speedup={t_naive / t_opt:.1f}x")
+    row("fig8_lr_row_naive", t_naive, "")
+    assert np.allclose(bhat_row.to_numpy(optimize=True),
+                       bhat_row.to_numpy(optimize=False), atol=1e-2,
+                       rtol=1e-2)
+
+    # Fig. 9: single Gram entry
+    g11 = X.t().multiply(X).select("RID=1 AND CID=1")
+    t_opt = timeit(lambda: g11.collect(optimize=True).value)
+    t_naive = timeit(lambda: g11.collect(optimize=False).value, repeats=2)
+    est = g11.optimized_plan().speedup_estimate
+    row("fig9_gram_entry_opt", t_opt,
+        f"speedup={t_naive / t_opt:.1f}x est={est:.0f}x")
+    row("fig9_gram_entry_naive", t_naive, "")
+    assert np.allclose(g11.to_numpy(True), g11.to_numpy(False), rtol=1e-3,
+                       atol=1e-3)

@@ -1,0 +1,50 @@
+"""Shared benchmark utilities: timing, synthetic matrices, CSV rows.
+
+Scale note (DESIGN.md §7): the paper benchmarks 100K–200K-dim sparse
+matrices on a 6-node cluster with 1-hour timeouts; this container is one
+CPU core, so benches run reduced dims with the same sparsity regimes and
+validate the paper's *relative* claims (optimized ≪ naive). Cases the paper
+reports as OOM/>1h become 'skipped(cost-model)' rows here — the cost model
+itself predicts infeasibility.
+"""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Callable, List, Optional
+
+import jax
+import numpy as np
+
+ROWS: List[str] = []
+
+
+def timeit(fn: Callable, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall time per call in microseconds."""
+    for _ in range(warmup):
+        r = fn()
+        jax.block_until_ready(r) if r is not None else None
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        r = fn()
+        if r is not None:
+            jax.block_until_ready(r)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def row(name: str, us: Optional[float], derived: str = "") -> None:
+    us_s = f"{us:.1f}" if us is not None else "skipped"
+    line = f"{name},{us_s},{derived}"
+    ROWS.append(line)
+    print(line, flush=True)
+
+
+def sparse(rng, m, n, density, round_vals=False) -> np.ndarray:
+    v = rng.normal(size=(m, n)).astype(np.float32)
+    keep = rng.uniform(size=(m, n)) < density
+    out = np.where(keep, v, 0).astype(np.float32)
+    if round_vals:
+        out = np.round(out, 1)
+    return out

@@ -1,0 +1,45 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Mapping to the paper:
+    bench_agg_gram      — Fig. 7a/7b  (sum/trace over Gram matrices)
+    bench_select_lr     — Figs. 8, 9  (selection pushdown, LR)
+    bench_cross_product — Table 5     (Kronecker / cross-product)
+    bench_join_dims     — Fig. 10     (direct/transpose overlay)
+    bench_join_single   — Fig. 11a–c  (D2D joins + cost-model validation)
+    bench_join_entries  — Fig. 11d    (V2V Bloom vs sparsity)
+    bench_pnmf          — Table 6     (PNMF pipeline)
+    bench_roofline      — (beyond paper) dry-run roofline table
+"""
+import sys
+import time
+
+import numpy as np
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_agg_gram, bench_cross_product, bench_join_dims,
+        bench_join_entries, bench_join_single, bench_pnmf, bench_roofline,
+        bench_select_lr,
+    )
+    from benchmarks.common import row
+
+    mods = [bench_agg_gram, bench_select_lr, bench_cross_product,
+            bench_join_dims, bench_join_single, bench_join_entries,
+            bench_pnmf, bench_roofline]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for mod in mods:
+        if only and only not in mod.__name__:
+            continue
+        rng = np.random.default_rng(0)
+        t = time.time()
+        mod.run(rng)
+        row(f"_{mod.__name__.split('.')[-1]}_wall", (time.time() - t) * 1e6,
+            "")
+    row("_total_wall", (time.time() - t0) * 1e6, "")
+
+
+if __name__ == '__main__':
+    main()

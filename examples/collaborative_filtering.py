@@ -1,0 +1,80 @@
+"""Paper Example 1: collaborative filtering with side information.
+
+Pipeline (all relational steps through the MatRel optimizer):
+ 1. data cleaning    — σ_cols≠NULL drops empty feature columns of X
+ 2. cross-validation — RID-range selections split Y into k folds
+ 3. model            — two-factor ALS-style updates for Ŷ = W×Hᵀ
+ 4. post-processing  — Γmax,r over the predicted matrix masked to
+                       non-recommended items (top-1 recommendation)
+
+Run:  PYTHONPATH=src python examples/collaborative_filtering.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Session
+
+N_ITEMS, N_USERS, N_FEAT, RANK = 600, 400, 64, 16
+rng = np.random.default_rng(0)
+
+
+def make_data():
+    w_true = rng.normal(size=(N_ITEMS, RANK)).astype(np.float32)
+    h_true = rng.normal(size=(N_USERS, RANK)).astype(np.float32)
+    full = w_true @ h_true.T
+    observed = rng.uniform(size=full.shape) < 0.05
+    y = np.where(observed & (full > 0.5), 1.0, 0.0).astype(np.float32)
+    x = rng.normal(size=(N_ITEMS, N_FEAT)).astype(np.float32)
+    x[:, rng.uniform(size=N_FEAT) < 0.2] = 0.0   # empty (unscraped) features
+    return y, x
+
+
+def main():
+    y, x = make_data()
+    s = Session()
+
+    # 1. relational cleaning of the side-information matrix
+    X = s.load(x, "X")
+    x_clean = X.select("cols != NULL").to_numpy()
+    print(f"[clean] feature matrix {x.shape} → {x_clean.shape} "
+          "(σ_cols≠NULL)")
+
+    # 2. k-fold split on the row dimension of Y (relational selects)
+    Y = s.load(y, "Y")
+    k = 5
+    fold = N_ITEMS // k
+    test = Y.select(f"RID>=0 AND RID<={fold - 1}").to_numpy()
+    train = Y.select(f"RID>={fold} AND RID<={N_ITEMS - 1}").to_numpy()
+    print(f"[split] train {train.shape} / test {test.shape}")
+
+    # 3. factorization on the training fold (simple ALS-ish updates)
+    m = train.shape[0]
+    w = jnp.asarray(np.abs(rng.normal(size=(m, RANK))) * 0.1)
+    h = jnp.asarray(np.abs(rng.normal(size=(N_USERS, RANK))) * 0.1)
+    yj = jnp.asarray(train)
+    lam = 0.1
+
+    @jax.jit
+    def step(w, h):
+        w = w + 0.05 * ((yj - w @ h.T) @ h - lam * w)
+        h = h + 0.05 * ((yj - w @ h.T).T @ w - lam * h)
+        return w, h
+
+    for i in range(200):
+        w, h = step(w, h)
+    err = float(jnp.mean((yj - w @ h.T) ** 2))
+    print(f"[train] mse={err:.4f}")
+
+    # 4. post-processing: mask out already-recommended items, Γmax per user
+    pred = np.asarray(w @ h.T)
+    s2 = Session()
+    P = s2.load(np.where(train == 0, pred, 0.0), "pred")  # non-recommended
+    best_scores = P.max("c").to_numpy().ravel()            # per user (cols)
+    top_items = np.argmax(np.where(train == 0, pred, -np.inf), axis=0)
+    print(f"[recommend] top-1 item for first 8 users: {top_items[:8]}")
+    print(f"[recommend] their scores: {np.round(best_scores[:8], 3)}")
+
+
+if __name__ == "__main__":
+    main()

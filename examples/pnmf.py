@@ -1,0 +1,41 @@
+"""Poisson NMF (paper §6, Table 6) with MatRel's sparsity-inducing execution.
+
+The A/(W×H) and A∗log(W×H) terms only touch W×H blocks under nonzero A
+blocks (masked-matmul kernel); E×Hᵀ / WᵀE collapse to row/column sums via
+the aggregation-pushdown rules. The loop reports the paper's objective.
+
+Run:  PYTHONPATH=src:. python examples/pnmf.py
+"""
+import numpy as np
+
+from benchmarks.bench_pnmf import BS, K, objective, pnmf_opt_step
+import jax
+import jax.numpy as jnp
+
+from repro.core.matrix import compute_block_mask
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n = 1500
+    a = np.where(rng.uniform(size=(n, n)) < 1e-3,
+                 np.abs(rng.normal(size=(n, n))), 0).astype(np.float32)
+    aj = jnp.asarray(a)
+    mask = compute_block_mask(aj, BS)
+    print(f"A: {a.shape}, nnz={int((a != 0).sum())}, "
+          f"nonzero blocks {int(np.asarray(mask).sum())}/{mask.size}")
+
+    w = jnp.asarray(np.abs(rng.normal(size=(n, K))).astype(np.float32))
+    h = jnp.asarray(np.abs(rng.normal(size=(K, n))).astype(np.float32))
+    step = jax.jit(lambda w_, h_: pnmf_opt_step(aj, mask, w_, h_))
+
+    for it in range(12):
+        if it % 3 == 0:
+            f = float(objective(aj, mask, w, h))
+            print(f"[iter {it:2d}] objective={f:,.1f}")
+        w, h = step(w, h)
+    print(f"[iter 12] objective={float(objective(aj, mask, w, h)):,.1f}")
+
+
+if __name__ == "__main__":
+    main()

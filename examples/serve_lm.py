@@ -1,0 +1,15 @@
+"""Batched serving example: prefill a prompt batch, decode new tokens with
+the KV/state caches (works for every --arch, incl. rwkv6/jamba).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--arch rwkv6-7b]
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    args = sys.argv[1:] or []
+    if "--arch" not in " ".join(args):
+        args = ["--arch", "qwen3-1.7b"] + args
+    sys.exit(main(args + ["--smoke", "--batch", "4", "--prompt-len", "64",
+                          "--new-tokens", "32"]))

@@ -1,0 +1,20 @@
+"""End-to-end LM training driver (assignment deliverable (b)):
+
+trains a reduced-config model for a few hundred steps on CPU through the
+full framework stack — MatRel data preprocessing, sharded-state AdamW,
+grad accumulation, async checkpointing, heartbeat/straggler monitoring.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--arch qwen3-1.7b]
+      (~100M-param variant: --width 512 --layers 8)
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    args = sys.argv[1:] or []
+    if "--arch" not in " ".join(args):
+        args = ["--arch", "qwen3-1.7b"] + args
+    sys.exit(main(args + ["--smoke", "--steps", "200", "--batch", "8",
+                          "--seq", "128", "--ckpt-dir", "/tmp/repro_ckpt",
+                          "--log-every", "20"]))

@@ -1,0 +1,26 @@
+"""MatRel core: relational query processing over big matrix data.
+
+This package is the reproduction of the paper's primary contribution:
+logical plan IR + transformation rules (§3), join operators and their
+optimizations (§4), the communication cost model and partitioner (§4.7),
+and the block-matrix execution layer (§5).
+"""
+from repro.core.api import Matrix, Session
+from repro.core.expr import (
+    Agg, AggDim, AggFn, ElemWise, EWOp, Expr, Inverse, Join, Leaf, MatMul,
+    MatScalar, MergeFn, Select, Transpose,
+)
+from repro.core.matrix import BlockMatrix, BlockTensor
+from repro.core.optimizer import optimize
+from repro.core.predicates import (
+    Atom, CmpOp, Conjunction, Field, JoinKind, JoinPred, parse_join,
+    parse_select,
+)
+
+__all__ = [
+    "Matrix", "Session", "BlockMatrix", "BlockTensor", "optimize",
+    "Agg", "AggDim", "AggFn", "ElemWise", "EWOp", "Expr", "Inverse", "Join",
+    "Leaf", "MatMul", "MatScalar", "MergeFn", "Select", "Transpose",
+    "Atom", "CmpOp", "Conjunction", "Field", "JoinKind", "JoinPred",
+    "parse_join", "parse_select",
+]

@@ -1,0 +1,156 @@
+"""User-facing fluent API mirroring the paper's Scala interface (Codes 1–5).
+
+    X = matrel.load(x_array, name="X")
+    tr = X.t().multiply(X).trace().collect()           # Code 1
+    g11 = X.t().multiply(X).select("RID=1 AND CID=1")  # Code 2
+    kron = A.cross_prod(B, lambda x, y: x * y)         # Code 3
+    C = A.join(B, "RID=RID AND CID=CID", f)            # Code 4
+    C = A.join(B, "VAL=VAL", f)                        # Code 5
+
+``collect()`` runs the rule-based optimizer then the sparsity-aware executor;
+``collect(optimize=False)`` is the naive plan (the paper's MatRel(w/o-opt)).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import executor as exmod
+from repro.core import optimizer as optmod
+from repro.core.expr import (
+    Agg, AggDim, AggFn, ElemWise, EWOp, Expr, Inverse, Join, Leaf, MatMul,
+    MatScalar, MergeFn, Select, Transpose,
+)
+from repro.core.matrix import BlockMatrix
+from repro.core.predicates import parse_join, parse_select
+
+
+class Session:
+    """Holds named base matrices (the catalog) and execution settings."""
+
+    def __init__(self, block_size: int = 256, mode: str = "sparse",
+                 use_bloom: bool = True):
+        self.env: Dict[str, BlockMatrix] = {}
+        self.block_size = block_size
+        self.mode = mode
+        self.use_bloom = use_bloom
+        self._auto = 0
+
+    def load(self, value, name: Optional[str] = None,
+             sparsity: Optional[float] = None) -> "Matrix":
+        if name is None:
+            self._auto += 1
+            name = f"_m{self._auto}"
+        bm = value if isinstance(value, BlockMatrix) else \
+            BlockMatrix.from_dense(jnp.asarray(value, jnp.float32),
+                                   self.block_size)
+        self.env[name] = bm
+        if sparsity is None:
+            sparsity = float(np.asarray(bm.nnz())) / max(1, bm.value.size)
+        return Matrix(self, Leaf(name, bm.shape, sparsity))
+
+    def execute(self, plan: Expr, optimize: bool = True):
+        if optimize:
+            res = optmod.optimize(plan)
+            plan = res.plan
+        return exmod.execute(plan, self.env, mode=self.mode,
+                             block_size=self.block_size,
+                             use_bloom=self.use_bloom)
+
+
+def _merge_of(f: Union[MergeFn, Callable], name: str = "f") -> MergeFn:
+    return f if isinstance(f, MergeFn) else MergeFn(name, f)
+
+
+@dataclasses.dataclass
+class Matrix:
+    session: Session
+    plan: Expr
+
+    # -- matrix operators (paper §2) -----------------------------------------
+    def t(self) -> "Matrix":
+        return Matrix(self.session, Transpose(self.plan))
+
+    def multiply(self, other: "Matrix") -> "Matrix":
+        return Matrix(self.session, MatMul(self.plan, other.plan))
+
+    def add(self, other: Union["Matrix", float]) -> "Matrix":
+        if isinstance(other, Matrix):
+            return Matrix(self.session,
+                          ElemWise(self.plan, other.plan, EWOp.ADD))
+        return Matrix(self.session,
+                      MatScalar(self.plan, EWOp.ADD, float(other)))
+
+    def emul(self, other: Union["Matrix", float]) -> "Matrix":
+        if isinstance(other, Matrix):
+            return Matrix(self.session,
+                          ElemWise(self.plan, other.plan, EWOp.MUL))
+        return Matrix(self.session,
+                      MatScalar(self.plan, EWOp.MUL, float(other)))
+
+    def ediv(self, other: "Matrix") -> "Matrix":
+        return Matrix(self.session, ElemWise(self.plan, other.plan, EWOp.DIV))
+
+    def inverse(self) -> "Matrix":
+        return Matrix(self.session, Inverse(self.plan))
+
+    # -- relational operators (paper §3, §4) ----------------------------------
+    def select(self, pred: str) -> "Matrix":
+        return Matrix(self.session, Select(self.plan, parse_select(pred)))
+
+    def agg(self, fn: str, dim: str) -> "Matrix":
+        return Matrix(self.session,
+                      Agg(self.plan, AggFn(fn), AggDim(dim)))
+
+    def sum(self, dim: str = "a") -> "Matrix":
+        return self.agg("sum", dim)
+
+    def nnz(self, dim: str = "a") -> "Matrix":
+        return self.agg("nnz", dim)
+
+    def avg(self, dim: str = "a") -> "Matrix":
+        return self.agg("avg", dim)
+
+    def max(self, dim: str = "a") -> "Matrix":
+        return self.agg("max", dim)
+
+    def min(self, dim: str = "a") -> "Matrix":
+        return self.agg("min", dim)
+
+    def trace(self) -> "Matrix":
+        return self.agg("sum", "d")
+
+    def join(self, other: "Matrix", pred: str,
+             f: Union[MergeFn, Callable]) -> "Matrix":
+        return Matrix(self.session,
+                      Join(self.plan, other.plan, parse_join(pred),
+                           _merge_of(f)))
+
+    def cross_prod(self, other: "Matrix",
+                   f: Union[MergeFn, Callable]) -> "Matrix":
+        return self.join(other, "CROSS", f)
+
+    # -- execution -------------------------------------------------------------
+    def optimized_plan(self) -> optmod.OptimizeResult:
+        return optmod.optimize(self.plan)
+
+    def explain(self) -> str:
+        res = self.optimized_plan()
+        return (f"== original (cost {res.original_cost:.4g}) ==\n"
+                f"{self.plan.pretty()}\n"
+                f"== optimized (cost {res.optimized_cost:.4g}, "
+                f"est speedup {res.speedup_estimate:.2f}x) ==\n"
+                f"{res.plan.pretty()}\n"
+                f"fired: {', '.join(res.fired) or '(none)'}")
+
+    def collect(self, optimize: bool = True):
+        return self.session.execute(self.plan, optimize=optimize)
+
+    def to_numpy(self, optimize: bool = True) -> np.ndarray:
+        out = self.collect(optimize=optimize)
+        if isinstance(out, BlockMatrix):
+            return np.asarray(out.value)
+        return out.to_dense()

@@ -1,0 +1,99 @@
+"""Bloom filters over matrix entries for V2V Bloom-joins (paper §4.7).
+
+Entries are float64/float32 values; we hash their bit patterns with k
+independent multiply-shift hashes into a power-of-two bitset stored as a
+uint32 array. Zero values are NOT inserted when the merge function is
+sparsity-inducing (the paper's interaction between the two heuristics).
+
+Pure-JAX implementation (jit/vmap friendly); the Pallas probe kernel in
+``repro.kernels.bloom_probe`` consumes the same bitset layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Knuth-style odd multipliers for multiply-shift hashing.
+_MULTIPLIERS = np.array(
+    [0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D, 0x27D4EB2F, 0x165667B1], np.uint32
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class BloomParams:
+    log2_bits: int = 20  # 1M bits = 128 KiB default
+    num_hashes: int = 3
+
+    @property
+    def n_bits(self) -> int:
+        return 1 << self.log2_bits
+
+    @property
+    def n_words(self) -> int:
+        return self.n_bits // 32
+
+
+def _value_keys(vals: jnp.ndarray) -> jnp.ndarray:
+    """Map float values to uint32 keys via their bit pattern (exact equality
+    semantics: x == y ⇒ key(x) == key(y))."""
+    v32 = vals.astype(jnp.float32)
+    return jax.lax.bitcast_convert_type(v32, jnp.uint32)
+
+
+def _hash(keys: jnp.ndarray, i: int, log2_bits: int) -> jnp.ndarray:
+    h = keys * _MULTIPLIERS[i % len(_MULTIPLIERS)]
+    h = h ^ (h >> jnp.uint32(15))
+    h = h * jnp.uint32(0x2C1B3C6D)
+    h = h ^ (h >> jnp.uint32(12))
+    return (h >> jnp.uint32(32 - log2_bits)).astype(jnp.uint32)
+
+
+def pack_bits(bits: jnp.ndarray) -> jnp.ndarray:
+    """Pack a bool[n_bits] array into uint32[n_bits // 32] (LSB-first)."""
+    n_words = bits.shape[0] // 32
+    lanes = bits.reshape(n_words, 32).astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(lanes << shifts, axis=1, dtype=jnp.uint32)
+
+
+def build(vals: jnp.ndarray, params: BloomParams = BloomParams(),
+          skip_zeros: bool = True) -> jnp.ndarray:
+    """Build a bitset (uint32[n_words]) containing all (nonzero) values.
+
+    Implemented as a boolean scatter into bit positions followed by a pack —
+    scatter of ``True`` is idempotent, so duplicate hash targets are safe
+    (a `.at[].max` on uint32 words would NOT be a bitwise OR).
+    """
+    flat = vals.reshape(-1)
+    keys = _value_keys(flat)
+    live = (flat != 0) if skip_zeros else jnp.ones(flat.shape, bool)
+    bits = jnp.zeros((params.n_bits,), bool)
+    sentinel = params.n_bits  # drop-mode target for dead entries
+    for i in range(params.num_hashes):
+        idx = _hash(keys, i, params.log2_bits).astype(jnp.int32)
+        idx = jnp.where(live, idx, sentinel)
+        bits = bits.at[idx].set(True, mode="drop")
+    return pack_bits(bits)
+
+
+def build_many(vals: jnp.ndarray, params: BloomParams = BloomParams(),
+               skip_zeros: bool = True) -> jnp.ndarray:
+    """OR-combine per-shard filters (all-gather of bitsets in distributed
+    mode); here a single call building from the full value set."""
+    return build(vals, params, skip_zeros)
+
+
+def probe(words: jnp.ndarray, vals: jnp.ndarray,
+          params: BloomParams = BloomParams()) -> jnp.ndarray:
+    """Return bool mask: True where the value *may* be in the filter."""
+    keys = _value_keys(vals.reshape(-1))
+    hit = jnp.ones(keys.shape, bool)
+    for i in range(params.num_hashes):
+        idx = _hash(keys, i, params.log2_bits)
+        word, bit = idx // 32, idx % 32
+        bits = (words[word] >> bit.astype(jnp.uint32)) & jnp.uint32(1)
+        hit = hit & (bits == 1)
+    return hit.reshape(vals.shape)

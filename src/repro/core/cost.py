@@ -1,0 +1,250 @@
+"""Cost model: computation cost of plans + the paper's communication model.
+
+Computation cost (flop estimates with sparsity) drives the rewrite engine;
+the communication model implements the paper's §4.7 cost functions verbatim:
+cross-product, direct/transpose overlay, Table 1 (D2D), Table 2 (D2V/V2D) and
+Table 3 (partition-scheme conversion). Sizes |A| follow the paper: nnz(A) for
+sparse matrices, m·n for dense.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+from repro.core.expr import (
+    Agg, AggDim, AggFn, ElemWise, EWOp, Expr, Inverse, Join, Leaf, MatMul,
+    MatScalar, Select,
+    Transpose,
+)
+from repro.core.predicates import Field, JoinKind, JoinPred
+
+# Partitioning schemes (paper §4.7): Row, Column, Broadcast (+ ξ = random).
+ROW, COL, BCAST, RANDOM = "r", "c", "b", "xi"
+SCHEMES = (ROW, COL, BCAST)
+
+# A matrix is "tiny" (broadcastable for free) below this entry count; mirrors
+# the paper's "Broadcast is only used for a matrix of low dimensions".
+BROADCAST_LIMIT = 1 << 22
+
+
+# ---------------------------------------------------------------------------
+# Computation cost (drives logical rewrites).
+# ---------------------------------------------------------------------------
+
+def node_flops(e: Expr) -> float:
+    """Estimated scalar ops to materialize node ``e`` from its children."""
+    if isinstance(e, Leaf):
+        return 0.0
+    if isinstance(e, Transpose):
+        return float(e.size)  # data movement; count as 1 op/entry
+    if isinstance(e, (MatScalar,)):
+        return float(e.x.size * max(e.x.sparsity, 1e-12)) \
+            if e.op is EWOp.MUL else float(e.x.size)
+    if isinstance(e, ElemWise):
+        sa, sb = e.a.sparsity, e.b.sparsity
+        if e.op is EWOp.MUL:
+            dens = min(sa, sb)          # sparsity-inducing both sides
+        elif e.op is EWOp.DIV:
+            dens = sa                   # numerator-side inducing (Eq. 20)
+        else:
+            dens = min(1.0, sa + sb)
+        return float(e.size) * max(dens, 1e-12)
+    if isinstance(e, MatMul):
+        m, k = e.a.shape
+        _, n = e.b.shape
+        dens = max(e.a.sparsity * e.b.sparsity, 1e-12)
+        return 2.0 * m * k * n * dens
+    if isinstance(e, Inverse):
+        n = e.shape[0]
+        return 2.0 * n ** 3
+    if isinstance(e, Select):
+        return float(e.size)  # slice/mask pass over the (output) region
+    if isinstance(e, Agg):
+        if e.dim is AggDim.DIAG:
+            return float(e.x.shape[0])
+        return float(e.x.size * max(e.x.sparsity, 1e-12))
+    if isinstance(e, Join):
+        return join_flops(e)
+    raise TypeError(f"unknown node {type(e)}")
+
+
+def join_flops(e: Join) -> float:
+    sa, sb = e.a.sparsity, e.b.sparsity
+    k = e.pred.kind
+    if k is JoinKind.CROSS:
+        return float(e.a.size * sa) * float(e.b.size * sb)
+    if k in (JoinKind.DIRECT_OVERLAY, JoinKind.TRANSPOSE_OVERLAY):
+        return float(e.size) * min(1.0, sa + sb)
+    if k is JoinKind.D2D:
+        d1, d2, d3 = e.shape
+        return float(d1) * (d2 * sa) * (d3 * sb)
+    if k is JoinKind.V2V:
+        return float(e.a.size * sa) * float(e.b.size * sb)
+    # D2V/V2D: each matched entry of the val side joins a row/col of the other
+    eta = 0.1
+    if k is JoinKind.D2V:
+        return float(e.b.size * sb * eta) * max(e.a.shape)
+    return float(e.a.size * sa * eta) * max(e.b.shape)
+
+
+def plan_flops(e: Expr) -> float:
+    return node_flops(e) + sum(plan_flops(c) for c in e.children())
+
+
+def plan_memory(e: Expr) -> float:
+    """Peak intermediate entries (coarse): sum of all materialized nodes."""
+    own = 0.0 if isinstance(e, Leaf) else float(e.size) * max(e.sparsity, 0.0)
+    return own + sum(plan_memory(c) for c in e.children())
+
+
+# ---------------------------------------------------------------------------
+# Communication cost model (paper §4.7). Units: matrix entries moved.
+# ---------------------------------------------------------------------------
+
+def size_of(e: Expr) -> float:
+    """|A|: nnz for sparse, m·n for dense (paper's convention)."""
+    return e.nnz_est if e.sparsity < 1.0 else float(e.size)
+
+
+def conversion_cost(size: float, s_from: str, s_to: str, n_workers: int) -> float:
+    """Paper Table 3: cost of re-partitioning a matrix between schemes."""
+    n = n_workers
+    if s_from == BCAST:
+        return 0.0
+    if s_from == s_to:
+        return 0.0
+    if s_from in (ROW, COL):
+        if s_to in (ROW, COL):
+            return (n - 1) / n * size
+        if s_to == BCAST:
+            return (n - 1) * size
+    if s_from == RANDOM:
+        if s_to in (ROW, COL):
+            return size
+        if s_to == BCAST:
+            return n * size
+    raise ValueError(f"unknown conversion {s_from}->{s_to}")
+
+
+def _d2d_cost(gamma: Tuple[Field, Field], s_a: str, s_b: str,
+              size_a: float, size_b: float, n: int) -> float:
+    """Paper Table 1. γ is (dim of A, dim of B)."""
+    if BCAST in (s_a, s_b):
+        return 0.0
+    la, rb = gamma
+    # The scheme "aligned" with the predicate on each side:
+    align_a = ROW if la is Field.RID else COL
+    align_b = ROW if rb is Field.RID else COL
+    a_ok, b_ok = (s_a == align_a), (s_b == align_b)
+    if a_ok and b_ok:
+        return 0.0
+    if a_ok and not b_ok:
+        # B mispartitioned: broadcast A or re-slot B's blocks
+        return min((n - 1) * size_a, (n - 1) / n * size_b)
+    if b_ok and not a_ok:
+        return min((n - 1) / n * size_a, (n - 1) * size_b)
+    return (n - 1) * min(size_a, size_b)
+
+
+def _dv_cost(kind: JoinKind, gamma_dim: Field, s_a: str, s_b: str,
+             size_a: float, size_b: float, n: int,
+             eta_a: float, eta_b: float) -> float:
+    """Paper Table 2 (D2V and V2D)."""
+    if BCAST in (s_a, s_b):
+        return 0.0
+    if kind is JoinKind.D2V:
+        # γ: dim_A = val_B. A aligned if its scheme matches the dim.
+        align_a = ROW if gamma_dim is Field.RID else COL
+        mult = 1.0 if s_a == align_a else float(n)
+        return min((n - 1) * size_a, mult * eta_b * size_b)
+    # V2D: val_A = dim_B
+    align_b = ROW if gamma_dim is Field.RID else COL
+    mult = 1.0 if s_b == align_b else float(n)
+    return min(mult * eta_a * size_a, (n - 1) * size_b)
+
+
+def join_comm_cost(pred: JoinPred, s_a: str, s_b: str, size_a: float,
+                   size_b: float, n_workers: int,
+                   eta_a: float = 0.1, eta_b: float = 0.1) -> float:
+    """C_comm(A ⋈_{γ,f} B | s_A, s_B): the paper's full §4.7 model."""
+    n = n_workers
+    k = pred.kind
+    if k is JoinKind.CROSS or k is JoinKind.V2V:
+        if BCAST in (s_a, s_b):
+            return 0.0
+        return (n - 1) * min(size_a, size_b)
+    if k is JoinKind.DIRECT_OVERLAY:
+        if BCAST in (s_a, s_b):
+            return 0.0
+        if (s_a, s_b) in ((ROW, COL), (COL, ROW)):
+            return (n - 1) / n * min(size_a, size_b)
+        return 0.0
+    if k is JoinKind.TRANSPOSE_OVERLAY:
+        if BCAST in (s_a, s_b):
+            return 0.0
+        if (s_a, s_b) in ((ROW, ROW), (COL, COL)):
+            return (n - 1) / n * min(size_a, size_b)
+        return 0.0
+    if k is JoinKind.D2D:
+        return _d2d_cost((pred.left, pred.right), s_a, s_b, size_a, size_b, n)
+    if k is JoinKind.D2V:
+        return _dv_cost(k, pred.left, s_a, s_b, size_a, size_b, n,
+                        eta_a, eta_b)
+    if k is JoinKind.V2D:
+        return _dv_cost(k, pred.right, s_a, s_b, size_a, size_b, n,
+                        eta_a, eta_b)
+    raise ValueError(k)
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionChoice:
+    scheme_a: str
+    scheme_b: str
+    comm_cost: float          # join communication under the chosen schemes
+    conversion_cost: float    # Table-3 conversion cost to reach them
+    total: float
+
+
+def broadcastable(size: float) -> bool:
+    return size <= BROADCAST_LIMIT
+
+
+def assign_schemes(pred: JoinPred, size_a: float, size_b: float,
+                   n_workers: int, s_a: str = RANDOM, s_b: str = RANDOM,
+                   eta_a: float = 0.1, eta_b: float = 0.1) -> PartitionChoice:
+    """Grid-search (s'_A, s'_B) minimizing C_comm + C_vt (paper §4.7 algo)."""
+    best = None
+    for sa2 in SCHEMES:
+        if sa2 == BCAST and not broadcastable(size_a):
+            continue
+        for sb2 in SCHEMES:
+            if sb2 == BCAST and not broadcastable(size_b):
+                continue
+            cc = join_comm_cost(pred, sa2, sb2, size_a, size_b, n_workers,
+                                eta_a, eta_b)
+            vt = (conversion_cost(size_a, s_a, sa2, n_workers)
+                  + conversion_cost(size_b, s_b, sb2, n_workers))
+            tot = cc + vt
+            if best is None or tot < best.total:
+                best = PartitionChoice(sa2, sb2, cc, vt, tot)
+    assert best is not None
+    return best
+
+
+def scheme_to_spec(scheme: str, worker_axis: str = "data"):
+    """Map a paper partitioning scheme onto a JAX PartitionSpec.
+
+    Row → shard dim 0 over the worker axis; Column → shard dim 1;
+    Broadcast → fully replicated. This is the 1:1 hardware adaptation of the
+    paper's RDD partitioners onto GSPMD shardings (DESIGN.md §2).
+    """
+    from jax.sharding import PartitionSpec as P
+    if scheme == ROW:
+        return P(worker_axis, None)
+    if scheme == COL:
+        return P(None, worker_axis)
+    if scheme == BCAST:
+        return P(None, None)
+    if scheme == RANDOM:
+        return P(worker_axis, None)  # arbitrary placement; row-major default
+    raise ValueError(scheme)

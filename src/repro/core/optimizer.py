@@ -1,0 +1,126 @@
+"""Rule-based logical optimizer + cost-gated rewriting (paper §2/§3 + §4.7).
+
+Pipeline (mirrors MatRel's Catalyst extension):
+  1. normalize        — structural cleanups (double transpose, scalar folds)
+  2. pushdown fixpoint— apply ALL_RULES bottom-up until no rule fires
+  3. chain reorder    — DP over matrix-multiplication chains using dims and
+                        sparsity estimates ("matrix order" opt in Fig. 8b)
+  4. cost gate        — keep the rewritten plan only if its estimated flop
+                        cost does not regress (it never should; asserted in
+                        property tests)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from repro.core import cost as costmod
+from repro.core.expr import (
+    Expr, MatMul, Transpose, transform_bottom_up,
+)
+from repro.core.rules import ALL_RULES, rule_transpose_matmul
+
+
+@dataclasses.dataclass
+class OptimizeResult:
+    plan: Expr
+    original_cost: float
+    optimized_cost: float
+    iterations: int
+    fired: List[str]
+
+    @property
+    def speedup_estimate(self) -> float:
+        return self.original_cost / max(self.optimized_cost, 1e-12)
+
+
+def _apply_rules_once(e: Expr, fired: List[str]) -> Expr:
+    def visit(node: Expr) -> Optional[Expr]:
+        for rule in ALL_RULES:
+            out = rule(node)
+            if out is not None:
+                fired.append(rule.__name__)
+                return out
+        return None
+
+    return transform_bottom_up(e, visit)
+
+
+# ---------------------------------------------------------------------------
+# Matrix-chain multiplication reordering (classic DP, sparsity-aware flops).
+# ---------------------------------------------------------------------------
+
+def _collect_chain(e: Expr) -> List[Expr]:
+    if isinstance(e, MatMul):
+        return _collect_chain(e.a) + _collect_chain(e.b)
+    return [e]
+
+
+def _chain_dp(terms: List[Expr]) -> Expr:
+    n = len(terms)
+    if n == 1:
+        return terms[0]
+    best_cost = [[0.0] * n for _ in range(n)]
+    best_plan: List[List[Optional[Expr]]] = \
+        [[None] * n for _ in range(n)]
+    for i, t in enumerate(terms):
+        best_plan[i][i] = t
+    for span in range(2, n + 1):
+        for i in range(0, n - span + 1):
+            j = i + span - 1
+            best = None
+            for k in range(i, j):
+                left, right = best_plan[i][k], best_plan[k + 1][j]
+                node = MatMul(left, right)
+                c = (best_cost[i][k] + best_cost[k + 1][j]
+                     + costmod.node_flops(node))
+                if best is None or c < best[0]:
+                    best = (c, node)
+            best_cost[i][j], best_plan[i][j] = best
+    return best_plan[0][n - 1]
+
+
+def reorder_chains(e: Expr) -> Expr:
+    def visit(node: Expr) -> Optional[Expr]:
+        if isinstance(node, MatMul):
+            terms = _collect_chain(node)
+            if len(terms) > 2:
+                return _chain_dp(terms)
+        return None
+
+    return transform_bottom_up(e, visit)
+
+
+# ---------------------------------------------------------------------------
+# Entry point.
+# ---------------------------------------------------------------------------
+
+MAX_ITERS = 32
+
+
+def optimize(e: Expr, enable_chain_reorder: bool = True,
+             enable_pushdown: bool = True) -> OptimizeResult:
+    original_cost = costmod.plan_flops(e)
+    fired: List[str] = []
+    plan = e
+    iters = 0
+    if enable_pushdown:
+        for iters in range(1, MAX_ITERS + 1):
+            before = plan
+            plan = _apply_rules_once(plan, fired)
+            if plan is before:
+                break
+    if enable_chain_reorder:
+        plan = reorder_chains(plan)
+        if enable_pushdown:
+            # chain reordering may open new pushdown opportunities
+            for _ in range(MAX_ITERS):
+                before = plan
+                plan = _apply_rules_once(plan, fired)
+                if plan is before:
+                    break
+    optimized_cost = costmod.plan_flops(plan)
+    if optimized_cost > original_cost:
+        # cost gate: never regress (fall back to the input plan)
+        plan, optimized_cost = e, original_cost
+    return OptimizeResult(plan, original_cost, optimized_cost, iters, fired)

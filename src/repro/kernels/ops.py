@@ -1,0 +1,96 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Dispatch policy: on TPU backends the Pallas kernels run compiled; elsewhere
+(this CPU container) the wrappers default to the pure-jnp reference path for
+speed, with ``force="pallas"`` running the kernels in interpret mode (used by
+the kernel test suite to validate the kernel bodies themselves).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref as refmod
+from repro.kernels.bloom_probe import bloom_probe_pallas
+from repro.kernels.masked_matmul import masked_matmul_pallas
+from repro.kernels.merge_join import (
+    MODE_ALL, MODE_BOTH, MODE_X, MODE_Y, merge_join_pallas,
+)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jnp.ndarray, mult0: int, mult1: int) -> jnp.ndarray:
+    p0 = (-x.shape[0]) % mult0
+    p1 = (-x.shape[1]) % mult1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def masked_matmul(a: jnp.ndarray, b: jnp.ndarray, out_block_mask: jnp.ndarray,
+                  *, block_size: int = 256, force: Optional[str] = None
+                  ) -> jnp.ndarray:
+    """(A×B) with whole output blocks gated by ``out_block_mask``.
+
+    ``out_block_mask`` is [ceil(M/bs), ceil(N/bs)] bool over the OUTPUT tile
+    grid — the paper's "compute only the W×H blocks under nonzero A blocks".
+    """
+    m, k = a.shape
+    _, n = b.shape
+    bs = block_size
+    use_pallas = force == "pallas" or (force is None and _on_tpu())
+    if not use_pallas:
+        return refmod.masked_matmul_ref(a, b, out_block_mask, bs, bs)
+    ap = _pad_to(a, bs, bs)
+    bp = _pad_to(b, bs, bs)
+    gm, gn = ap.shape[0] // bs, bp.shape[1] // bs
+    mk = out_block_mask
+    if mk.shape != (gm, gn):
+        mk = jnp.pad(mk, ((0, gm - mk.shape[0]), (0, gn - mk.shape[1])))
+    out = masked_matmul_pallas(ap, bp, mk, bm=bs, bn=bs,
+                               bk=min(bs, ap.shape[1]),
+                               interpret=not _on_tpu())
+    return out[:m, :n]
+
+
+def merge_join(a: jnp.ndarray, b: jnp.ndarray, mask_a: jnp.ndarray,
+               mask_b: jnp.ndarray, merge: Callable, mode: int = MODE_ALL,
+               *, block_size: int = 256, force: Optional[str] = None
+               ) -> jnp.ndarray:
+    bs = block_size
+    use_pallas = force == "pallas" or (force is None and _on_tpu())
+    if not use_pallas:
+        return refmod.merge_join_ref(a, b, mask_a, mask_b, merge, mode,
+                                     bs, bs)
+    ap, bp = _pad_to(a, bs, bs), _pad_to(b, bs, bs)
+    gm, gn = ap.shape[0] // bs, ap.shape[1] // bs
+
+    def padm(mk):
+        return jnp.pad(mk, ((0, gm - mk.shape[0]), (0, gn - mk.shape[1])))
+
+    out = merge_join_pallas(ap, bp, padm(mask_a), padm(mask_b),
+                            merge=merge, mode=mode, bm=bs, bn=bs,
+                            interpret=not _on_tpu())
+    return out[: a.shape[0], : a.shape[1]]
+
+
+def bloom_probe(words: jnp.ndarray, vals: jnp.ndarray, *,
+                num_hashes: int = 3, log2_bits: int = 20,
+                force: Optional[str] = None) -> jnp.ndarray:
+    use_pallas = force == "pallas" or (force is None and _on_tpu())
+    if not use_pallas:
+        return refmod.bloom_probe_ref(words, vals, num_hashes, log2_bits)
+    n = vals.shape[0]
+    bs = 4096
+    pad = (-n) % bs
+    vp = jnp.pad(vals, (0, pad), constant_values=np.nan)  # NaN never matches
+    out = bloom_probe_pallas(words, vp, num_hashes=num_hashes,
+                             log2_bits=log2_bits, bs=bs,
+                             interpret=not _on_tpu())
+    return out[:n]

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bloom import BloomParams, probe as bloom_probe_jnp
+
+
+def masked_matmul_ref(a: jnp.ndarray, b: jnp.ndarray,
+                      mask: jnp.ndarray, block_m: int,
+                      block_n: int) -> jnp.ndarray:
+    """Full matmul, then zero masked-out (block_m × block_n) output tiles."""
+    full = jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+    big = jnp.repeat(jnp.repeat(mask, block_m, axis=0), block_n, axis=1)
+    return jnp.where(big[: full.shape[0], : full.shape[1]], full, 0)
+
+
+def merge_join_ref(a: jnp.ndarray, b: jnp.ndarray, mask_a: jnp.ndarray,
+                   mask_b: jnp.ndarray, merge: Callable, mode: int,
+                   block_m: int, block_n: int) -> jnp.ndarray:
+    from repro.kernels.merge_join import MODE_ALL, MODE_BOTH, MODE_X, MODE_Y
+    if mode == MODE_BOTH:
+        live = mask_a & mask_b
+    elif mode == MODE_X:
+        live = mask_a
+    elif mode == MODE_Y:
+        live = mask_b
+    else:
+        live = jnp.ones_like(mask_a)
+    big = jnp.repeat(jnp.repeat(live, block_m, axis=0), block_n, axis=1)
+    out = merge(a, b).astype(a.dtype)
+    return jnp.where(big[: a.shape[0], : a.shape[1]], out, 0)
+
+
+def bloom_probe_ref(words: jnp.ndarray, vals: jnp.ndarray,
+                    num_hashes: int = 3, log2_bits: int = 20) -> jnp.ndarray:
+    return bloom_probe_jnp(
+        words, vals, BloomParams(log2_bits=log2_bits, num_hashes=num_hashes))

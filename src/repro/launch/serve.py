@@ -1,0 +1,77 @@
+"""Batched serving driver: prefill a batch of prompts, decode N tokens.
+
+CPU-scale usage (reduced config):
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
+        --batch 4 --prompt-len 64 --new-tokens 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models import api as mapi
+from repro.models.module import init_params
+from repro.serve.step import make_decode_step, make_prefill_step
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduced(cfg)
+    b, s, n_new = args.batch, args.prompt_len, args.new_tokens
+    max_seq = s + n_new + (cfg.n_img_tokens if cfg.family == "vlm" else 0)
+
+    params = init_params(jax.random.key(args.seed), mapi.spec(cfg))
+    rng = np.random.default_rng(args.seed)
+    prompt = jnp.asarray(rng.integers(1, cfg.vocab_size, (b, s)),
+                         jnp.int32)
+    batch = {"tokens": prompt}
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(b, s, cfg.d_model)), jnp.float32)
+    if cfg.family == "vlm":
+        batch["img_embeds"] = jnp.asarray(
+            rng.normal(size=(b, cfg.n_img_tokens, cfg.img_embed_dim)),
+            jnp.float32)
+
+    prefill = jax.jit(make_prefill_step(cfg, max_seq))
+    decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
+
+    t0 = time.time()
+    logits, caches = prefill(params, batch)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    pos0 = s + (cfg.n_img_tokens if cfg.family == "vlm" else 0)
+    outs = [tok]
+    t0 = time.time()
+    for i in range(n_new - 1):
+        _, tok, caches = decode(params, caches, tok, jnp.int32(pos0 + i))
+        outs.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+    gen = jnp.concatenate(outs, axis=1)
+    print(f"[serve] arch={cfg.arch_id} batch={b} prompt={s} new={n_new}")
+    print(f"[serve] prefill {t_prefill*1e3:.0f} ms; decode "
+          f"{t_decode/max(1, n_new-1)*1e3:.1f} ms/tok; "
+          f"throughput {(b*(n_new-1))/max(t_decode,1e-9):.1f} tok/s")
+    print(f"[serve] sample tokens: {np.asarray(gen[0, :16])}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

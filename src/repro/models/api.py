@@ -1,0 +1,92 @@
+"""Family dispatcher: one uniform interface over all 10 architectures.
+
+    spec(cfg)                      → ParamSpec tree
+    forward(params, cfg, batch)    → (logits, aux)       [train math]
+    prefill(params, cfg, batch)    → (logits, caches)
+    decode_step(params, cfg, caches, token, pos) → (logits, caches)
+    cache_abstract(cfg, batch, max_seq [, enc_len])
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec as encdec_mod
+from repro.models import lm as lm_mod
+
+
+def spec(cfg: ModelConfig) -> Dict:
+    if cfg.family == "audio":
+        return encdec_mod.encdec_spec(cfg)
+    return lm_mod.lm_spec(cfg)
+
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if cfg.family == "audio":
+        return encdec_mod.encdec_forward(params, cfg, batch["frames"],
+                                         batch["tokens"])
+    return lm_mod.lm_forward(params, cfg, batch["tokens"],
+                             batch.get("img_embeds"))
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            max_seq: int) -> Tuple[jnp.ndarray, Any]:
+    if cfg.family == "audio":
+        memory = encdec_mod.encode(params, cfg, batch["frames"])
+        logits = encdec_mod.decode_train(params, cfg, batch["tokens"],
+                                         memory)
+        self_c = _encdec_self_cache(params, cfg, batch["tokens"], memory,
+                                    max_seq)
+        cross_c = encdec_mod.build_cross_cache(params, cfg, memory)
+        return logits, {"self": self_c, "cross": cross_c}
+    return lm_mod.lm_prefill(params, cfg, batch["tokens"], max_seq,
+                             batch.get("img_embeds"))
+
+
+def _encdec_self_cache(params, cfg, tokens, memory, max_seq):
+    from repro.models import attention as attn
+    from repro.models.layers import apply_norm, embed, sinusoidal_positions
+    dt = cfg.compute_dtype
+    x = embed(params["embed"], tokens, dt)
+    x = x + sinusoidal_positions(tokens.shape[1], cfg.d_model).astype(dt)
+
+    def block(x, pp):
+        h = apply_norm(pp["ln1"], x, cfg.norm)
+        cache = attn.prefill_kv(pp["self_attn"], cfg, h, max_seq)
+        x = x + attn.attention(pp["self_attn"], cfg, h, causal=True)
+        h2 = apply_norm(pp["ln_x"], x, cfg.norm)
+        x = x + attn.attention(pp["cross_attn"], cfg, h2, causal=False,
+                               kv_x=memory)
+        h3 = apply_norm(pp["ln2"], x, cfg.norm)
+        from repro.models.mlp import apply_mlp
+        x = x + apply_mlp(pp["mlp"], cfg, h3)
+        return x, cache
+
+    _, caches = jax.lax.scan(block, x, params["dec"]["layers"])
+    return caches
+
+
+def cache_abstract(cfg: ModelConfig, batch: int, max_seq: int,
+                   enc_len: int = 0):
+    if cfg.family == "audio":
+        return encdec_mod.encdec_cache_abstract(cfg, batch, max_seq,
+                                                enc_len or max_seq)
+    return lm_mod.cache_abstract(cfg, batch, max_seq)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_seq: int,
+                enc_len: int = 0):
+    return jax.tree.map(
+        lambda st: jnp.zeros(st.shape, st.dtype),
+        cache_abstract(cfg, batch, max_seq, enc_len),
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def decode_step(params, cfg: ModelConfig, caches, token, pos):
+    if cfg.family == "audio":
+        return encdec_mod.encdec_decode_step(params, cfg, caches, token, pos)
+    return lm_mod.lm_decode_step(params, cfg, caches, token, pos)

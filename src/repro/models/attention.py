@@ -1,0 +1,297 @@
+"""Attention: GQA/MHA with qk-norm, QKV bias, sliding window, RoPE;
+full / chunked (flash-schedule) / decode paths; ring-buffer SWA cache.
+
+The chunked path is a pure-JAX flash-attention schedule (online softmax over
+KV chunks inside a scan) — it compiles on every backend (required for the
+512-device CPU dry-run) and has the same O(S) working-set property as a
+hand-written flash kernel; DESIGN.md records this as the TPU adaptation
+choice for the 32k prefill cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, rms_head_norm
+from repro.models.module import ParamSpec
+
+NEG_INF = -2.0 ** 20  # large-but-finite mask value (bf16-safe)
+
+
+def attn_spec(cfg: ModelConfig, layers: Optional[int] = None,
+              cross: bool = False) -> Dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    lead = (layers,) if layers else ()
+    la: Tuple[Optional[str], ...] = ("layers",) if layers else ()
+    spec = {
+        "wq": ParamSpec(lead + (d, hq * hd), la + ("embed", "heads")),
+        "wk": ParamSpec(lead + (d, hkv * hd), la + ("embed", "kv_heads")),
+        "wv": ParamSpec(lead + (d, hkv * hd), la + ("embed", "kv_heads")),
+        "wo": ParamSpec(lead + (hq * hd, d), la + ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        spec["bq"] = ParamSpec(lead + (hq * hd,), la + ("heads",), "zeros")
+        spec["bk"] = ParamSpec(lead + (hkv * hd,), la + ("kv_heads",),
+                               "zeros")
+        spec["bv"] = ParamSpec(lead + (hkv * hd,), la + ("kv_heads",),
+                               "zeros")
+    if cfg.attn_out_bias:
+        spec["bo"] = ParamSpec(lead + (d,), la + ("embed",), "zeros")
+    if cfg.qk_norm:
+        spec["q_norm"] = ParamSpec(lead + (hd,), la + (None,), "ones")
+        spec["k_norm"] = ParamSpec(lead + (hd,), la + (None,), "ones")
+    return spec
+
+
+def _project_qkv(p, cfg: ModelConfig, x: jnp.ndarray,
+                 kv_x: Optional[jnp.ndarray] = None):
+    dt = cfg.compute_dtype
+    b, s, _ = x.shape
+    kv_x = x if kv_x is None else kv_x
+    t = kv_x.shape[1]
+    q = jnp.einsum("bsd,df->bsf", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,df->bsf", kv_x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,df->bsf", kv_x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    from repro.sharding.ctx import shard_act
+    q = shard_act(q.reshape(b, s, cfg.n_heads, cfg.hd),
+                  "batch", None, "act_heads", None)
+    k = shard_act(k.reshape(b, t, cfg.n_kv_heads, cfg.hd),
+                  "batch", None, "act_heads", None)
+    v = shard_act(v.reshape(b, t, cfg.n_kv_heads, cfg.hd),
+                  "batch", None, "act_heads", None)
+    if cfg.qk_norm:
+        q = rms_head_norm(p["q_norm"].astype(jnp.float32), q)
+        k = rms_head_norm(p["k_norm"].astype(jnp.float32), k)
+    return q, k, v
+
+
+def _out_proj(p, cfg: ModelConfig, o: jnp.ndarray) -> jnp.ndarray:
+    b, s = o.shape[:2]
+    dt = cfg.compute_dtype
+    y = jnp.einsum("bsf,fd->bsd", o.reshape(b, s, -1), p["wo"].astype(dt))
+    if cfg.attn_out_bias:
+        y = y + p["bo"].astype(dt)
+    return y
+
+
+def _mask(qpos: jnp.ndarray, kpos: jnp.ndarray, causal: bool,
+          window: Optional[int]) -> jnp.ndarray:
+    """[..., S, T] bool allowed-attention mask."""
+    diff = qpos[..., :, None] - kpos[..., None, :]
+    ok = jnp.ones(diff.shape, bool)
+    if causal:
+        ok &= diff >= 0
+    if window is not None:
+        ok &= diff < window
+    return ok
+
+
+def _expand_kv(q, k, v):
+    """Repeat KV heads to the query head count (Megatron-style GQA TP:
+    with tensor-parallel degree > n_kv_heads the repeated KV shards over the
+    full head dimension instead of replicating)."""
+    g = q.shape[2] // k.shape[2]
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    return k, v
+
+
+def _sdpa(q, k, v, mask) -> jnp.ndarray:
+    """q [B,S,Hq,hd], k/v [B,T,Hkv,hd], mask [B?,S,T] → [B,S,Hq,hd]."""
+    from repro.sharding.ctx import shard_act
+    b, s, hq, hd = q.shape
+    k, v = _expand_kv(q, k, v)
+    k = shard_act(k, "batch", None, "act_heads", None)
+    v = shard_act(v, "batch", None, "act_heads", None)
+    scale = hd ** -0.5
+    logits = jnp.einsum("bshd,bthd->bhst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    while mask.ndim < logits.ndim:
+        mask = mask[:, None]
+    logits = jnp.where(mask, logits, NEG_INF)
+    logits = shard_act(logits, "batch", "act_heads", None, None)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bhst,bthd->bshd", w, v)
+    return o
+
+
+def _chunked_sdpa(q, k, v, q_offset: int, causal: bool,
+                  window: Optional[int], qc: int, kc: int) -> jnp.ndarray:
+    """Flash-schedule attention: online softmax over KV chunks (pure JAX)."""
+    from repro.sharding.ctx import shard_act
+    b, s, hq, hd = q.shape
+    k, v = _expand_kv(q, k, v)
+    t, h = k.shape[1], k.shape[2]
+    qc = min(qc, s)
+    kc = min(kc, t)
+    assert s % qc == 0 and t % kc == 0, (s, qc, t, kc)
+    nq, nk = s // qc, t // kc
+    scale = hd ** -0.5
+    q6 = q.reshape(b, nq, qc, h, hd).transpose(1, 0, 2, 3, 4)
+    k5 = k.reshape(b, nk, kc, h, hd).transpose(1, 0, 2, 3, 4)
+    v5 = v.reshape(b, nk, kc, h, hd).transpose(1, 0, 2, 3, 4)
+
+    def q_block(qi, qb):
+        qpos = q_offset + qi * qc + jnp.arange(qc)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, kb, vb = inp
+            kpos = ki * kc + jnp.arange(kc)
+            msk = _mask(qpos, kpos, causal, window)       # [qc, kc]
+            lg = jnp.einsum("bshd,bthd->bhst", qb, kb,
+                            preferred_element_type=jnp.float32) * scale
+            lg = jnp.where(msk[None, None], lg, NEG_INF)
+            lg = shard_act(lg, "batch", "act_heads", None, None)
+            m2 = jnp.maximum(m, lg.max(axis=-1))
+            corr = jnp.exp(m - m2)
+            p = jnp.exp(lg - m2[..., None])
+            l2 = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhst,bthd->bshd", p.astype(q.dtype), vb)
+            acc2 = acc * corr.transpose(0, 2, 1)[..., None] \
+                + pv.astype(jnp.float32)
+            return (m2, l2, acc2), None
+
+        m0 = jnp.full((b, h, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, h, qc), jnp.float32)
+        a0 = jnp.zeros((b, qc, h, hd), jnp.float32)  # f32 accumulator
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), k5, v5))
+        l = jnp.maximum(l, 1e-20)
+        out = (acc / l.transpose(0, 2, 1)[..., None]).astype(q.dtype)
+        return out
+
+    blocks = jax.lax.map(lambda args: q_block(*args),
+                         (jnp.arange(nq), q6))
+    return blocks.transpose(1, 0, 2, 3, 4).reshape(b, s, hq, hd)
+
+
+def attention(p, cfg: ModelConfig, x: jnp.ndarray, *,
+              causal: bool = True, kv_x: Optional[jnp.ndarray] = None,
+              q_offset: int = 0) -> jnp.ndarray:
+    """Full-sequence attention (train / prefill)."""
+    q, k, v = _project_qkv(p, cfg, x, kv_x)
+    s, t = q.shape[1], k.shape[1]
+    if causal and kv_x is None:
+        qpos = q_offset + jnp.arange(s)
+        kpos = jnp.arange(t)
+        q = apply_rope(q, qpos[None], cfg.rope_theta)
+        k = apply_rope(k, kpos[None], cfg.rope_theta)
+    if max(s, t) >= cfg.chunked_attn_threshold:
+        o = _chunked_sdpa(q, k, v, q_offset, causal, cfg.sliding_window,
+                          cfg.attn_chunk_q, cfg.attn_chunk_kv)
+    else:
+        qpos = (q_offset + jnp.arange(s))[None]
+        kpos = jnp.arange(t)[None]
+        msk = _mask(qpos, kpos, causal, cfg.sliding_window)
+        o = _sdpa(q, k, v, msk)
+    return _out_proj(p, cfg, o)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode): plain cache for full attention; ring buffer for SWA.
+# ---------------------------------------------------------------------------
+
+def cache_len(cfg: ModelConfig, max_seq: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(cfg.sliding_window, max_seq)
+    return max_seq
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, layers: int,
+               dtype=None) -> Dict[str, jnp.ndarray]:
+    n = cache_len(cfg, max_seq)
+    dt = dtype or cfg.compute_dtype
+    return {
+        "k": jnp.zeros((layers, batch, n, cfg.n_kv_heads, cfg.hd), dt),
+        "v": jnp.zeros((layers, batch, n, cfg.n_kv_heads, cfg.hd), dt),
+        "pos": jnp.full((layers, batch, n), -1, jnp.int32),
+    }
+
+
+def cache_abstract(cfg: ModelConfig, batch: int, max_seq: int, layers: int,
+                   dtype=None):
+    n = cache_len(cfg, max_seq)
+    dt = dtype or cfg.compute_dtype
+    return {
+        "k": jax.ShapeDtypeStruct((layers, batch, n, cfg.n_kv_heads,
+                                   cfg.hd), dt),
+        "v": jax.ShapeDtypeStruct((layers, batch, n, cfg.n_kv_heads,
+                                   cfg.hd), dt),
+        "pos": jax.ShapeDtypeStruct((layers, batch, n), jnp.int32),
+    }
+
+
+def decode_attention(p, cfg: ModelConfig, x: jnp.ndarray,
+                     layer_cache: Dict[str, jnp.ndarray],
+                     pos: jnp.ndarray,
+                     cross: bool = False
+                     ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One-token decode. x [B,1,d]; layer_cache k/v [B,N,Hkv,hd], pos [B,N].
+
+    For sliding-window configs N == window and writes wrap (ring buffer);
+    the stored per-slot positions make the wraparound mask exact.
+    For cross-attention the cache holds the (precomputed) encoder K/V and is
+    returned untouched.
+    """
+    q, k_new, v_new = _project_qkv(p, cfg, x)
+    n = layer_cache["k"].shape[1]
+    if cross:
+        # cache holds precomputed encoder K/V; no rope (whisper-style)
+        msk = layer_cache["pos"][:, None, :] >= 0
+        o = _sdpa(q, layer_cache["k"], layer_cache["v"], msk)
+        return _out_proj(p, cfg, o), layer_cache
+    qpos = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q = apply_rope(q, qpos, cfg.rope_theta)
+    k_new = apply_rope(k_new, qpos, cfg.rope_theta)
+    slot = (pos % n).astype(jnp.int32)
+    k = jax.lax.dynamic_update_slice(layer_cache["k"], k_new,
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(layer_cache["v"], v_new,
+                                     (0, slot, 0, 0))
+    cpos = jax.lax.dynamic_update_slice(
+        layer_cache["pos"], jnp.full((x.shape[0], 1), pos, jnp.int32),
+        (0, slot))
+    valid = cpos >= 0
+    allowed = (cpos <= pos)
+    if cfg.sliding_window is not None:
+        allowed &= (pos - cpos) < cfg.sliding_window
+    msk = (valid & allowed)[:, None, :]
+    o = _sdpa(q, k, v, msk)
+    new_cache = {"k": k, "v": v, "pos": cpos}
+    return _out_proj(p, cfg, o), new_cache
+
+
+def prefill_kv(p, cfg: ModelConfig, x: jnp.ndarray, max_seq: int
+               ) -> Dict[str, jnp.ndarray]:
+    """Build a decode cache from a full prefill pass over x [B,S,d]."""
+    _, k, v = _project_qkv(p, cfg, x)
+    b, s = k.shape[0], k.shape[1]
+    kpos = jnp.arange(s)[None]
+    k = apply_rope(k, kpos, cfg.rope_theta)
+    n = cache_len(cfg, max_seq)
+    if s >= n:
+        ks, vs = k[:, s - n:], v[:, s - n:]
+        ps = jnp.broadcast_to(jnp.arange(s - n, s)[None], (b, n))
+        # ring-buffer invariant: position p lives at slot p % n
+        shift = (s - n) % n
+        if shift:
+            ks = jnp.roll(ks, shift, axis=1)
+            vs = jnp.roll(vs, shift, axis=1)
+            ps = jnp.roll(ps, shift, axis=1)
+    else:
+        pad = n - s
+        ks = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        ps = jnp.pad(jnp.broadcast_to(jnp.arange(s)[None], (b, s)),
+                     ((0, 0), (0, pad)), constant_values=-1)
+    return {"k": ks, "v": vs, "pos": ps.astype(jnp.int32)}

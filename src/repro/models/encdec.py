@@ -1,0 +1,182 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+Per the assignment the conv frontend is a STUB: ``input_specs()`` provides
+precomputed frame embeddings [B, S_frames, d_model] (what the two conv
+layers would emit). Encoder: bidirectional self-attention + GELU MLP with
+sinusoidal positions. Decoder: causal self-attention + cross-attention to
+the encoder memory + GELU MLP, learned positions, tied unembedding.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import (
+    apply_norm, embed, embed_spec, norm_spec, sinusoidal_positions, unembed,
+)
+from repro.models.lm import _stacked_norm
+from repro.models.mlp import apply_mlp, mlp_spec
+from repro.models.module import ParamSpec
+
+
+def encdec_spec(cfg: ModelConfig) -> Dict:
+    ne, nd = cfg.n_enc_layers, cfg.n_layers
+    return {
+        "embed": embed_spec(cfg.vocab_size, cfg.d_model),
+        "enc": {
+            "layers": {
+                "ln1": _stacked_norm(cfg, ne),
+                "attn": attn.attn_spec(cfg, layers=ne),
+                "ln2": _stacked_norm(cfg, ne),
+                "mlp": mlp_spec(cfg, layers=ne),
+            },
+            "final_norm": norm_spec(cfg.d_model, cfg.norm),
+        },
+        "dec": {
+            "layers": {
+                "ln1": _stacked_norm(cfg, nd),
+                "self_attn": attn.attn_spec(cfg, layers=nd),
+                "ln_x": _stacked_norm(cfg, nd),
+                "cross_attn": attn.attn_spec(cfg, layers=nd),
+                "ln2": _stacked_norm(cfg, nd),
+                "mlp": mlp_spec(cfg, layers=nd),
+            },
+            "final_norm": norm_spec(cfg.d_model, cfg.norm),
+        },
+    }
+
+
+def encode(params, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames [B, S, d_model] (stubbed conv output) → memory [B, S, d]."""
+    dt = cfg.compute_dtype
+    s = frames.shape[1]
+    x = frames.astype(dt) + sinusoidal_positions(s, cfg.d_model).astype(dt)
+
+    def block(x, pp):
+        h = apply_norm(pp["ln1"], x, cfg.norm)
+        x = x + attn.attention(pp["attn"], cfg, h, causal=False)
+        h = apply_norm(pp["ln2"], x, cfg.norm)
+        x = x + apply_mlp(pp["mlp"], cfg, h)
+        return x, None
+
+    if cfg.remat != "none":
+        block = jax.checkpoint(block, prevent_cse=False)
+    x, _ = jax.lax.scan(block, x, params["enc"]["layers"])
+    return apply_norm(params["enc"]["final_norm"], x, cfg.norm)
+
+
+def decode_train(params, cfg: ModelConfig, tokens: jnp.ndarray,
+                 memory: jnp.ndarray) -> jnp.ndarray:
+    """Teacher-forced decoder pass → logits [B, S, V]."""
+    dt = cfg.compute_dtype
+    x = embed(params["embed"], tokens, dt)
+    x = x + sinusoidal_positions(tokens.shape[1], cfg.d_model).astype(dt)
+
+    def block(x, pp):
+        h = apply_norm(pp["ln1"], x, cfg.norm)
+        x = x + attn.attention(pp["self_attn"], cfg, h, causal=True)
+        h = apply_norm(pp["ln_x"], x, cfg.norm)
+        x = x + attn.attention(pp["cross_attn"], cfg, h, causal=False,
+                               kv_x=memory)
+        h = apply_norm(pp["ln2"], x, cfg.norm)
+        x = x + apply_mlp(pp["mlp"], cfg, h)
+        return x, None
+
+    if cfg.remat != "none":
+        block = jax.checkpoint(block, prevent_cse=False)
+    x, _ = jax.lax.scan(block, x, params["dec"]["layers"])
+    x = apply_norm(params["dec"]["final_norm"], x, cfg.norm)
+    return unembed(params["embed"], x, dt)
+
+
+def encdec_forward(params, cfg: ModelConfig, frames: jnp.ndarray,
+                   tokens: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    memory = encode(params, cfg, frames)
+    logits = decode_train(params, cfg, tokens, memory)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Serving: self-attn KV cache + precomputed cross K/V.
+# ---------------------------------------------------------------------------
+
+def encdec_cache_abstract(cfg: ModelConfig, batch: int, max_seq: int,
+                          enc_len: int) -> Dict:
+    nd = cfg.n_layers
+    self_c = attn.cache_abstract(cfg, batch, max_seq, nd)
+    cross_c = {
+        "k": jax.ShapeDtypeStruct(
+            (nd, batch, enc_len, cfg.n_kv_heads, cfg.hd), cfg.compute_dtype),
+        "v": jax.ShapeDtypeStruct(
+            (nd, batch, enc_len, cfg.n_kv_heads, cfg.hd), cfg.compute_dtype),
+        "pos": jax.ShapeDtypeStruct((nd, batch, enc_len), jnp.int32),
+    }
+    return {"self": self_c, "cross": cross_c}
+
+
+def encdec_init_caches(cfg: ModelConfig, batch: int, max_seq: int,
+                       enc_len: int):
+    return jax.tree.map(
+        lambda st: jnp.zeros(st.shape, st.dtype),
+        encdec_cache_abstract(cfg, batch, max_seq, enc_len),
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def build_cross_cache(params, cfg: ModelConfig, memory: jnp.ndarray) -> Dict:
+    """Precompute per-layer cross-attention K/V from the encoder memory."""
+    dt = cfg.compute_dtype
+    b, s, _ = memory.shape
+
+    def one(pp):
+        k = jnp.einsum("bsd,df->bsf", memory, pp["wk"].astype(dt))
+        v = jnp.einsum("bsd,df->bsf", memory, pp["wv"].astype(dt))
+        if cfg.qkv_bias:
+            k = k + pp["bk"].astype(dt)
+            v = v + pp["bv"].astype(dt)
+        k = k.reshape(b, s, cfg.n_kv_heads, cfg.hd)
+        v = v.reshape(b, s, cfg.n_kv_heads, cfg.hd)
+        return k, v
+
+    ks, vs = jax.vmap(one)(params["dec"]["layers"]["cross_attn"])
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, None],
+                           (cfg.n_layers, b, s))
+    return {"k": ks, "v": vs, "pos": pos}
+
+
+def encdec_decode_step(params, cfg: ModelConfig, caches,
+                       token: jnp.ndarray, pos: jnp.ndarray
+                       ) -> Tuple[jnp.ndarray, Any]:
+    dt = cfg.compute_dtype
+    x = embed(params["embed"], token, dt)
+    # sinusoidal position of the current (traced) decode position
+    d = cfg.d_model
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32)
+                  * (-jnp.log(10000.0) / d))
+    ang = pos.astype(jnp.float32) * div
+    pe = jnp.zeros((d,), jnp.float32).at[0::2].set(jnp.sin(ang))
+    pe = pe.at[1::2].set(jnp.cos(ang))
+    x = x + pe.astype(dt)
+
+    def block(x, inp):
+        pp, self_c, cross_c = inp
+        h = apply_norm(pp["ln1"], x, cfg.norm)
+        mx, new_self = attn.decode_attention(pp["self_attn"], cfg, h,
+                                             self_c, pos)
+        x = x + mx
+        h = apply_norm(pp["ln_x"], x, cfg.norm)
+        mx, _ = attn.decode_attention(pp["cross_attn"], cfg, h, cross_c,
+                                      pos, cross=True)
+        x = x + mx
+        h = apply_norm(pp["ln2"], x, cfg.norm)
+        x = x + apply_mlp(pp["mlp"], cfg, h)
+        return x, new_self
+
+    x, new_self = jax.lax.scan(
+        block, x, (params["dec"]["layers"], caches["self"], caches["cross"]))
+    x = apply_norm(params["dec"]["final_norm"], x, cfg.norm)
+    logits = unembed(params["embed"], x, dt)
+    return logits, {"self": new_self, "cross": caches["cross"]}

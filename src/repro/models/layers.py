@@ -1,0 +1,115 @@
+"""Shared neural building blocks: norms, rope, embeddings, projections."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.module import ParamSpec
+
+
+# --------------------------------------------------------------------------
+# Norms.
+# --------------------------------------------------------------------------
+
+def norm_spec(d: int, kind: str):
+    if kind == "layernorm":
+        return {"scale": ParamSpec((d,), ("embed",), "ones"),
+                "bias": ParamSpec((d,), ("embed",), "zeros")}
+    return {"scale": ParamSpec((d,), ("embed",), "ones")}
+
+
+def apply_norm(p, x: jnp.ndarray, kind: str, eps: float = 1e-6
+               ) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"] + p["bias"]
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(scale: jnp.ndarray, x: jnp.ndarray,
+                  eps: float = 1e-6) -> jnp.ndarray:
+    """Per-head q/k norm (qwen3): x [..., head_dim], scale [head_dim]."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings.
+# --------------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: [..., S, H, hd]; positions broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., None, :]                    # [..., S, 1, hd/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Dense projections (einsum-based, logical-axis annotated).
+# --------------------------------------------------------------------------
+
+def linear_spec(d_in: int, d_out: int, in_axis: str = "embed",
+                out_axis: str = "ffn", bias: bool = False,
+                layers: Optional[int] = None):
+    lead = (layers,) if layers else ()
+    lead_ax: Tuple[Optional[str], ...] = ("layers",) if layers else ()
+    spec = {"w": ParamSpec(lead + (d_in, d_out),
+                           lead_ax + (in_axis, out_axis))}
+    if bias:
+        spec["b"] = ParamSpec(lead + (d_out,), lead_ax + (out_axis,),
+                              "zeros")
+    return spec
+
+
+def apply_linear(p, x: jnp.ndarray, dtype) -> jnp.ndarray:
+    y = jnp.einsum("...d,df->...f", x, p["w"].astype(dtype))
+    if "b" in p:
+        y = y + p["b"].astype(dtype)
+    return y
+
+
+# --------------------------------------------------------------------------
+# Embedding / unembedding.
+# --------------------------------------------------------------------------
+
+def embed_spec(vocab: int, d: int):
+    return ParamSpec((vocab, d), ("vocab", "embed"), "normal", scale=0.02)
+
+
+def embed(p: jnp.ndarray, tokens: jnp.ndarray, dtype) -> jnp.ndarray:
+    return p.astype(dtype)[tokens]
+
+
+def unembed(p: jnp.ndarray, x: jnp.ndarray, dtype) -> jnp.ndarray:
+    """Logits via the (possibly tied) embedding: [B,S,d] → [B,S,V]."""
+    return jnp.einsum("...d,vd->...v", x, p.astype(dtype))
+
+
+def sinusoidal_positions(n: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32)
+                  * (-jnp.log(10000.0) / d))
+    pe = jnp.zeros((n, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe

@@ -1,0 +1,332 @@
+"""Decoder-only LM assembly for every assigned non-enc-dec architecture.
+
+Heterogeneous depth patterns (jamba's 1-attention-per-8 interleave, MoE
+every-other-layer, RWKV's paired mixers) are expressed as a *block program*:
+the minimal repeating period of (mixer, ffn) positions. Parameters for each
+period position are stacked over the n_blocks repeats and the model scans
+over blocks — HLO size and compile time stay O(period), not O(L), and the
+roofline parser multiplies the scan body by the detected trip count.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mamba as mamba_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models.layers import apply_norm, embed, embed_spec, norm_spec, \
+    unembed
+from repro.models.mlp import apply_mlp, mlp_spec
+from repro.models.moe import apply_moe, moe_spec
+from repro.models.module import ParamSpec
+from repro.sharding.ctx import shard_act
+
+
+@dataclasses.dataclass(frozen=True)
+class PositionSpec:
+    mixer: str   # attn | mamba | rwkv
+    ffn: str     # mlp | moe | rwkv_cm | none
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockProgram:
+    period: int
+    n_blocks: int
+    positions: Tuple[PositionSpec, ...]
+
+    @property
+    def attn_positions(self) -> Tuple[int, ...]:
+        return tuple(i for i, p in enumerate(self.positions)
+                     if p.mixer == "attn")
+
+
+def build_program(cfg: ModelConfig) -> BlockProgram:
+    if cfg.family == "ssm" and cfg.ssm.kind == "rwkv6":
+        pattern = [PositionSpec("rwkv", "rwkv_cm")] * cfg.n_layers
+    else:
+        mixers = cfg.layer_kinds()
+        ffns = cfg.ffn_kinds()
+        if cfg.family == "hybrid":
+            # jamba: mamba layers keep their (alternating) ffn; full pattern
+            pattern = [PositionSpec(m, f) for m, f in zip(mixers, ffns)]
+        else:
+            pattern = [PositionSpec(m, f) for m, f in zip(mixers, ffns)]
+    n = len(pattern)
+    period = n
+    for p in range(1, n + 1):
+        if n % p == 0 and pattern[:p] * (n // p) == pattern:
+            period = p
+            break
+    return BlockProgram(period, n // period, tuple(pattern[:period]))
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs.
+# ---------------------------------------------------------------------------
+
+def _position_spec(cfg: ModelConfig, ps: PositionSpec, n_blocks: int) -> Dict:
+    # params are ALWAYS stacked with a leading n_blocks dim (scan length may
+    # be 1): uniform treatment keeps decode caches and params congruent
+    L = n_blocks
+    spec: Dict[str, Any] = {"ln1": _stacked_norm(cfg, L)}
+    if ps.mixer == "attn":
+        spec["attn"] = attn.attn_spec(cfg, layers=L)
+    elif ps.mixer == "mamba":
+        spec["mamba"] = mamba_mod.mamba_spec(cfg, layers=L)
+    elif ps.mixer == "rwkv":
+        spec["rwkv_t"] = rwkv_mod.rwkv_time_spec(cfg, layers=L)
+    if ps.ffn != "none":
+        spec["ln2"] = _stacked_norm(cfg, L)
+    if ps.ffn == "mlp":
+        spec["mlp"] = mlp_spec(cfg, layers=L)
+    elif ps.ffn == "moe":
+        spec["moe"] = moe_spec(cfg, layers=L)
+    elif ps.ffn == "rwkv_cm":
+        spec["rwkv_c"] = rwkv_mod.rwkv_channel_spec(cfg, layers=L)
+    return spec
+
+
+def _stacked_norm(cfg: ModelConfig, L: int) -> Dict:
+    d = cfg.d_model
+    base = norm_spec(d, cfg.norm)
+    out = {}
+    for k, s in base.items():
+        out[k] = ParamSpec((L,) + s.shape, ("layers",) + s.axes, s.init)
+    return out
+
+
+def lm_spec(cfg: ModelConfig) -> Dict:
+    prog = build_program(cfg)
+    spec: Dict[str, Any] = {
+        "embed": embed_spec(cfg.vocab_size, cfg.d_model),
+        "final_norm": norm_spec(cfg.d_model, cfg.norm),
+        "blocks": {f"pos{i}": _position_spec(cfg, ps, prog.n_blocks)
+                   for i, ps in enumerate(prog.positions)},
+    }
+    if not cfg.tie_embeddings:
+        spec["unembed"] = ParamSpec((cfg.vocab_size, cfg.d_model),
+                                    ("vocab", "embed"), "normal", scale=0.02)
+    if cfg.n_img_tokens:
+        spec["img_proj"] = {"w": ParamSpec(
+            (cfg.img_embed_dim, cfg.d_model), (None, "embed"))}
+    return spec
+
+
+def _index_norm(p, i):
+    return p  # norms are indexed together with the rest of the slice
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill-without-cache).
+# ---------------------------------------------------------------------------
+
+def _apply_position(cfg: ModelConfig, ps: PositionSpec, pp, x, aux):
+    x = shard_act(x, "batch", None, None)
+    h = apply_norm(pp["ln1"], x, cfg.norm)
+    if ps.mixer == "attn":
+        mx = attn.attention(pp["attn"], cfg, h)
+    elif ps.mixer == "mamba":
+        mx = mamba_mod.apply_mamba(pp["mamba"], cfg, h)
+    else:
+        mx = rwkv_mod.apply_rwkv_time(pp["rwkv_t"], cfg, h)
+    x = x + mx
+    if ps.ffn != "none":
+        h = apply_norm(pp["ln2"], x, cfg.norm)
+        if ps.ffn == "mlp":
+            y = apply_mlp(pp["mlp"], cfg, h)
+        elif ps.ffn == "moe":
+            y, a = apply_moe(pp["moe"], cfg, h)
+            aux = aux + a
+        else:
+            y = rwkv_mod.apply_rwkv_channel(pp["rwkv_c"], cfg, h)
+        x = x + y
+    return x, aux
+
+
+def _block_fn(cfg: ModelConfig, prog: BlockProgram):
+    def block(carry, blk_params):
+        x, aux = carry
+        for i, ps in enumerate(prog.positions):
+            x, aux = _apply_position(cfg, ps, blk_params[f"pos{i}"], x, aux)
+        return (x, aux), None
+
+    if cfg.remat == "full":
+        block = jax.checkpoint(block, prevent_cse=False)
+    elif cfg.remat == "dots":
+        block = jax.checkpoint(
+            block, policy=jax.checkpoint_policies.checkpoint_dots,
+            prevent_cse=False)
+    return block
+
+
+def lm_hidden(params, cfg: ModelConfig, tokens: jnp.ndarray,
+              img_embeds: Optional[jnp.ndarray] = None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Backbone forward without the unembedding: (x [B,S,d], aux)."""
+    prog = build_program(cfg)
+    dt = cfg.compute_dtype
+    x = embed(params["embed"], tokens, dt)
+    if cfg.n_img_tokens and img_embeds is not None:
+        img = jnp.einsum("bnd,df->bnf", img_embeds.astype(dt),
+                         params["img_proj"]["w"].astype(dt))
+        x = jnp.concatenate([img, x], axis=1)
+    x = shard_act(x, "batch", None, None)
+    aux0 = jnp.zeros((), jnp.float32)
+    block = _block_fn(cfg, prog)
+    (x, aux), _ = jax.lax.scan(block, (x, aux0), params["blocks"])
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return x, aux
+
+
+def output_weight(params, cfg: ModelConfig):
+    return params["embed"] if cfg.tie_embeddings else params["unembed"]
+
+
+def lm_forward(params, cfg: ModelConfig, tokens: jnp.ndarray,
+               img_embeds: Optional[jnp.ndarray] = None
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens [B,S(-n_img)] (+ optional image patch embeddings) → logits.
+
+    Returns (logits [B,S,V], moe aux loss scalar).
+    """
+    x, aux = lm_hidden(params, cfg, tokens, img_embeds)
+    dt = cfg.compute_dtype
+    logits = shard_act(unembed(output_weight(params, cfg), x, dt),
+                       "batch", None, "vocab")
+    return logits, aux
+
+
+def lm_prefill(params, cfg: ModelConfig, tokens: jnp.ndarray, max_seq: int,
+               img_embeds: Optional[jnp.ndarray] = None):
+    """Full forward that also extracts the decode caches (prefill step).
+
+    Returns (logits [B,S,V], caches) where caches match cache_abstract().
+    """
+    prog = build_program(cfg)
+    dt = cfg.compute_dtype
+    x = embed(params["embed"], tokens, dt)
+    if cfg.n_img_tokens and img_embeds is not None:
+        img = jnp.einsum("bnd,df->bnf", img_embeds.astype(dt),
+                         params["img_proj"]["w"].astype(dt))
+        x = jnp.concatenate([img, x], axis=1)
+
+    def block(x, blk_params):
+        caches = {}
+        for i, ps in enumerate(prog.positions):
+            pp = blk_params[f"pos{i}"]
+            h = apply_norm(pp["ln1"], x, cfg.norm)
+            if ps.mixer == "attn":
+                mx = attn.attention(pp["attn"], cfg, h)
+                cache = attn.prefill_kv(pp["attn"], cfg, h, max_seq)
+            elif ps.mixer == "mamba":
+                mx, cache = mamba_mod.apply_mamba(pp["mamba"], cfg, h,
+                                                  return_state=True)
+            else:
+                mx, wkv, sh_t = rwkv_mod.apply_rwkv_time(
+                    pp["rwkv_t"], cfg, h, return_state=True)
+                cache = {"wkv": wkv, "shift_t": sh_t}
+            x = x + mx
+            if ps.ffn != "none":
+                h = apply_norm(pp["ln2"], x, cfg.norm)
+                if ps.ffn == "mlp":
+                    y = apply_mlp(pp["mlp"], cfg, h)
+                elif ps.ffn == "moe":
+                    y, _ = apply_moe(pp["moe"], cfg, h)
+                else:
+                    y = rwkv_mod.apply_rwkv_channel(pp["rwkv_c"], cfg, h)
+                    cache = dict(cache, shift_c=h[:, -1])
+                x = x + y
+            caches[f"pos{i}"] = cache
+        return x, caches
+
+    x, caches = jax.lax.scan(block, x, params["blocks"])
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    if cfg.prefill_last_only:
+        x = x[:, -1:]   # serve-prefill only needs the next-token logits
+    w_out = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(w_out, x, dt)
+    return logits, caches
+
+
+# ---------------------------------------------------------------------------
+# Decode: single-token step over stacked per-block caches.
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, max_seq: int):
+    return jax.tree.map(lambda st: jnp.zeros(st.shape, st.dtype),
+                        cache_abstract(cfg, batch, max_seq),
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def cache_abstract(cfg: ModelConfig, batch: int, max_seq: int) -> Dict:
+    """ShapeDtypeStruct cache tree (for dry-run serve_step lowering)."""
+    prog = build_program(cfg)
+    nb = prog.n_blocks
+    out: Dict[str, Any] = {}
+    for i, ps in enumerate(prog.positions):
+        key = f"pos{i}"
+        if ps.mixer == "attn":
+            out[key] = attn.cache_abstract(cfg, batch, max_seq, nb)
+        elif ps.mixer == "mamba":
+            out[key] = mamba_mod.mamba_state_abstract(cfg, batch, nb)
+        else:
+            out[key] = rwkv_mod.rwkv_state_abstract(cfg, batch, nb)
+    return out
+
+
+def _decode_position(cfg, ps: PositionSpec, pp, cache_slice, x, pos):
+    h = apply_norm(pp["ln1"], x, cfg.norm)
+    if ps.mixer == "attn":
+        mx, new_cache = attn.decode_attention(pp["attn"], cfg, h,
+                                              cache_slice, pos)
+    elif ps.mixer == "mamba":
+        mx, new_cache = mamba_mod.decode_mamba(pp["mamba"], cfg, h,
+                                               cache_slice)
+    else:
+        mx, wkv, sh_t = rwkv_mod.decode_rwkv_time(
+            pp["rwkv_t"], cfg, h, cache_slice["wkv"],
+            cache_slice["shift_t"])
+        new_cache = {"wkv": wkv, "shift_t": sh_t,
+                     "shift_c": cache_slice["shift_c"]}
+    x = x + mx
+    if ps.ffn != "none":
+        h = apply_norm(pp["ln2"], x, cfg.norm)
+        if ps.ffn == "mlp":
+            y = apply_mlp(pp["mlp"], cfg, h)
+        elif ps.ffn == "moe":
+            y, _ = apply_moe(pp["moe"], cfg, h)
+        else:
+            y, sh_c = rwkv_mod.decode_rwkv_channel(
+                pp["rwkv_c"], cfg, h, new_cache["shift_c"])
+            new_cache = dict(new_cache, shift_c=sh_c)
+        x = x + y
+    return x, new_cache
+
+
+def lm_decode_step(params, cfg: ModelConfig, caches,
+                   token: jnp.ndarray, pos: jnp.ndarray
+                   ) -> Tuple[jnp.ndarray, Any]:
+    """token [B,1] int32; pos scalar int32 → (logits [B,1,V], new caches)."""
+    prog = build_program(cfg)
+    dt = cfg.compute_dtype
+    x = embed(params["embed"], token, dt)
+
+    def block(x, inp):
+        blk_params, blk_cache = inp
+        new_cache = {}
+        for i, ps in enumerate(prog.positions):
+            x, nc = _decode_position(cfg, ps, blk_params[f"pos{i}"],
+                                     blk_cache[f"pos{i}"], x, pos)
+            new_cache[f"pos{i}"] = nc
+        return x, new_cache
+
+    x, new_caches = jax.lax.scan(block, x, (params["blocks"], caches))
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    w_out = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(w_out, x, dt)
+    return logits, new_caches

@@ -1,0 +1,172 @@
+"""Mamba-1 selective SSM block (for jamba's hybrid interleave).
+
+Train path: projections + causal depthwise conv are full-sequence einsums;
+the selective recurrence h_t = exp(Δ_t A)·h_{t-1} + Δ_t B_t x_t runs as a
+``lax.scan`` over time with an O(B·d_in·N) carry — the discretized Ā is
+formed per-step inside the body (materializing it for all t would be
+S·B·d_in·N and is exactly the memory blow-up the scan avoids). On TPU this
+layer is VPU/bandwidth-bound by construction; the roofline analysis
+attributes it to the memory term.
+
+Decode path: single-step recurrence with (conv window, h) state — O(1) in
+sequence length, which is what makes the 500k-decode cell feasible.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.module import ParamSpec
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or -(-cfg.d_model // 16)
+    return d_in, s.d_state, s.d_conv, dt_rank
+
+
+def mamba_spec(cfg: ModelConfig, layers: Optional[int] = None) -> Dict:
+    d = cfg.d_model
+    d_in, n, k, dtr = _dims(cfg)
+    lead = (layers,) if layers else ()
+    la: Tuple[Optional[str], ...] = ("layers",) if layers else ()
+    return {
+        "in_proj": ParamSpec(lead + (d, 2 * d_in), la + ("embed", "ffn")),
+        "conv_w": ParamSpec(lead + (k, d_in), la + (None, "ffn"),
+                            "normal", scale=1.0 / math.sqrt(k)),
+        "conv_b": ParamSpec(lead + (d_in,), la + ("ffn",), "zeros"),
+        "x_proj": ParamSpec(lead + (d_in, dtr + 2 * n), la + ("ffn", None)),
+        "dt_proj": ParamSpec(lead + (dtr, d_in), la + (None, "ffn")),
+        "dt_bias": ParamSpec(lead + (d_in,), la + ("ffn",), "zeros"),
+        "a_log": ParamSpec(lead + (d_in, n), la + ("ffn", None),
+                           "ssm_a_log"),
+        "d_skip": ParamSpec(lead + (d_in,), la + ("ffn",), "ones"),
+        "out_proj": ParamSpec(lead + (d_in, d), la + ("ffn", "embed")),
+    }
+
+
+def _causal_conv(w: jnp.ndarray, b: jnp.ndarray, x: jnp.ndarray,
+                 init_state: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv over time via stacked shifts.
+
+    x [B,S,d_in]; w [K,d_in]. y_t = Σ_j w_j · x_{t-(K-1)+j} + b.
+    """
+    k = w.shape[0]
+    y = x * w[k - 1]
+    for j in range(k - 1):
+        shift = k - 1 - j
+        xs = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        y = y + xs * w[j]
+    return y + b
+
+
+def apply_mamba(p, cfg: ModelConfig, x: jnp.ndarray,
+                return_state: bool = False):
+    """Full-sequence Mamba mixer: x [B,S,d] → [B,S,d].
+
+    With ``return_state`` also returns the decode state {conv, h} matching
+    ``decode_mamba`` (prefill → decode handoff).
+    """
+    dt_ = cfg.compute_dtype
+    d_in, n, k, dtr = _dims(cfg)
+    b, s, _ = x.shape
+    from repro.sharding.ctx import shard_act
+    xz = shard_act(jnp.einsum("bsd,df->bsf", x, p["in_proj"].astype(dt_)),
+                   "batch", None, "act_ffn")
+    x1, z = jnp.split(xz, 2, axis=-1)
+    x1_raw = x1
+    x1 = _causal_conv(p["conv_w"].astype(dt_), p["conv_b"].astype(dt_), x1)
+    x1 = jax.nn.silu(x1)
+    proj = jnp.einsum("bsf,fp->bsp", x1, p["x_proj"].astype(dt_))
+    dt_r, bmat, cmat = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    delta = jax.nn.softplus(
+        jnp.einsum("bsr,rf->bsf", dt_r, p["dt_proj"].astype(dt_))
+        + p["dt_bias"].astype(dt_)).astype(jnp.float32)        # [B,S,d_in]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))               # [d_in,N]
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        dt32 = dt_t.astype(jnp.float32)
+        abar = jnp.exp(dt32[..., None] * a)                    # [B,d_in,N]
+        bx = (dt32 * x_t.astype(jnp.float32))[..., None] \
+            * b_t.astype(jnp.float32)[:, None, :]
+        h = abar * h + bx
+        y_t = jnp.einsum("bfn,bn->bf", h, c_t.astype(jnp.float32))
+        return h, y_t
+
+    h0 = jnp.zeros((b, d_in, n), jnp.float32)
+    # PERF: bf16 transport for the per-step inputs (delta stays f32 —
+    # the discretization exp() is precision-sensitive)
+    xs = (x1.transpose(1, 0, 2),
+          delta.transpose(1, 0, 2),
+          bmat.transpose(1, 0, 2),
+          cmat.transpose(1, 0, 2))
+    from repro.models.rwkv import _recurrence_scan
+    h_last, ys = _recurrence_scan(cfg, step, h0, xs)
+    y = ys.transpose(1, 0, 2).astype(dt_)                      # [B,S,d_in]
+    y = y + x1 * p["d_skip"].astype(dt_)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsf,fd->bsd", y, p["out_proj"].astype(dt_))
+    if return_state:
+        pad = max(0, (k - 1) - s)
+        window = x1_raw[:, max(0, s - (k - 1)):]
+        if pad:
+            window = jnp.pad(window, ((0, 0), (pad, 0), (0, 0)))
+        return out, {"conv": window, "h": h_last}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode: O(1)-state single-step recurrence.
+# ---------------------------------------------------------------------------
+
+def mamba_state_abstract(cfg: ModelConfig, batch: int, n_layers: int,
+                         dtype=None):
+    d_in, n, k, _ = _dims(cfg)
+    dt_ = dtype or jnp.float32
+    return {
+        "conv": jax.ShapeDtypeStruct((n_layers, batch, k - 1, d_in),
+                                     cfg.compute_dtype),
+        "h": jax.ShapeDtypeStruct((n_layers, batch, d_in, n), dt_),
+    }
+
+
+def mamba_state_init(cfg: ModelConfig, batch: int, n_layers: int,
+                     dtype=None):
+    return jax.tree.map(lambda st: jnp.zeros(st.shape, st.dtype),
+                        mamba_state_abstract(cfg, batch, n_layers, dtype))
+
+
+def decode_mamba(p, cfg: ModelConfig, x: jnp.ndarray,
+                 state: Dict[str, jnp.ndarray]
+                 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x [B,1,d]; state conv [B,K-1,d_in], h [B,d_in,N]."""
+    dt_ = cfg.compute_dtype
+    d_in, n, k, dtr = _dims(cfg)
+    xz = jnp.einsum("bsd,df->bsf", x, p["in_proj"].astype(dt_))
+    x1, z = jnp.split(xz, 2, axis=-1)                           # [B,1,d_in]
+    window = jnp.concatenate([state["conv"], x1], axis=1)       # [B,K,d_in]
+    w = p["conv_w"].astype(dt_)
+    x1c = jnp.einsum("bkf,kf->bf", window, w) + p["conv_b"].astype(dt_)
+    x1c = jax.nn.silu(x1c)                                      # [B,d_in]
+    proj = jnp.einsum("bf,fp->bp", x1c, p["x_proj"].astype(dt_))
+    dt_r, b_t, c_t = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    delta = jax.nn.softplus(
+        jnp.einsum("br,rf->bf", dt_r, p["dt_proj"].astype(dt_))
+        + p["dt_bias"].astype(dt_)).astype(jnp.float32)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    abar = jnp.exp(delta[..., None] * a)
+    bx = (delta * x1c.astype(jnp.float32))[..., None] \
+        * b_t.astype(jnp.float32)[:, None, :]
+    h = abar * state["h"] + bx
+    y = jnp.einsum("bfn,bn->bf", h, c_t.astype(jnp.float32)).astype(dt_)
+    y = y + x1c * p["d_skip"].astype(dt_)
+    y = (y[:, None, :] * jax.nn.silu(z))
+    out = jnp.einsum("bsf,fd->bsd", y, p["out_proj"].astype(dt_))
+    new_state = {"conv": window[:, 1:], "h": h}
+    return out, new_state

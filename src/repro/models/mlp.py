@@ -1,0 +1,44 @@
+"""Feed-forward blocks: SwiGLU / GELU / squared-ReLU (RWKV channel-mix)."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.module import ParamSpec
+
+
+def mlp_spec(cfg: ModelConfig, layers: Optional[int] = None,
+             d_ff: Optional[int] = None) -> Dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    lead = (layers,) if layers else ()
+    la: Tuple[Optional[str], ...] = ("layers",) if layers else ()
+    if cfg.activation == "swiglu":
+        return {
+            "w_gate": ParamSpec(lead + (d, f), la + ("embed", "ffn")),
+            "w_up": ParamSpec(lead + (d, f), la + ("embed", "ffn")),
+            "w_down": ParamSpec(lead + (f, d), la + ("ffn", "embed")),
+        }
+    return {
+        "w_up": ParamSpec(lead + (d, f), la + ("embed", "ffn")),
+        "b_up": ParamSpec(lead + (f,), la + ("ffn",), "zeros"),
+        "w_down": ParamSpec(lead + (f, d), la + ("ffn", "embed")),
+        "b_down": ParamSpec(lead + (d,), la + ("embed",), "zeros"),
+    }
+
+
+def apply_mlp(p, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    from repro.sharding.ctx import shard_act
+    dt = cfg.compute_dtype
+    if cfg.activation == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, p["w_gate"].astype(dt))
+        u = jnp.einsum("...d,df->...f", x, p["w_up"].astype(dt))
+        h = shard_act(jax.nn.silu(g) * u, "batch", None, "act_ffn")
+        return jnp.einsum("...f,fd->...d", h, p["w_down"].astype(dt))
+    h = jnp.einsum("...d,df->...f", x, p["w_up"].astype(dt)) \
+        + p["b_up"].astype(dt)
+    h = shard_act(jax.nn.gelu(h), "batch", None, "act_ffn")
+    return jnp.einsum("...f,fd->...d", h, p["w_down"].astype(dt)) \
+        + p["b_down"].astype(dt)

@@ -1,0 +1,178 @@
+"""Minimal pytree module system: parameter specs + init + sharding.
+
+No flax/haiku dependency: a model definition is a nested dict of
+``ParamSpec`` leaves; ``init_params`` materializes values and
+``partition_specs`` maps each leaf's *logical axes* onto mesh axes through
+``MeshRules`` (MaxText-style logical sharding, DESIGN.md §5). Forward passes
+are pure functions over the materialized pytree.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis names (None = replicated)
+    init: str = "normal"              # normal | zeros | ones | identity_decay
+    scale: Optional[float] = None     # stddev; default fan-in
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    """Logical axis → mesh axis mapping.
+
+    ``batch`` axes are the pure-DP axes (pod + data); ``fsdp`` shards weight
+    storage; ``tensor`` is the model-parallel axis.
+    """
+
+    fsdp: Tuple[str, ...] = ("data",)
+    tensor: Tuple[str, ...] = ("model",)
+    batch: Tuple[str, ...] = ("pod", "data")
+    sequence: Tuple[str, ...] = ()   # optional SP axis for activations
+
+    def mesh_axes_for(self, logical: Optional[str]) -> Tuple[str, ...]:
+        if logical is None:
+            return ()
+        table = {
+            # weight axes
+            "embed": self.fsdp,        # d_model dim of weights (fsdp storage)
+            "ffn": self.tensor,        # hidden/ffn/head output dims (TP)
+            "heads": self.tensor,
+            "kv_heads": self.tensor,
+            "vocab": self.tensor,      # vocab-sharded embedding/unembedding
+            "experts": self.tensor,    # EP when divisible
+            "layers": (),              # stacked scan dim: replicated
+            # activation axes
+            "batch": self.batch,
+            "act_seq": self.sequence,
+            "act_embed": self.tensor,
+            "act_heads": self.tensor,
+            "act_ffn": self.tensor,
+            "act_experts": self.tensor,
+            "act_kv": (),
+            "stage": ("pod",),
+        }
+        return table.get(logical, ())
+
+
+def _axes_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    n = 1
+    for a in axes:
+        if a in mesh.shape:
+            n *= mesh.shape[a]
+    return n
+
+
+def spec_for(mesh: Mesh, rules: MeshRules,
+             axes: Tuple[Optional[str], ...],
+             shape: Tuple[int, ...]) -> P:
+    """PartitionSpec with divisibility guard: a dim is sharded only when its
+    extent divides the product of the mapped mesh axes (avoids GSPMD silently
+    padding, e.g. 8 KV heads on a 16-way tensor axis stay replicated)."""
+    out = []
+    used: set = set()
+    for dim, logical in zip(shape, axes):
+        mesh_axes = tuple(a for a in rules.mesh_axes_for(logical)
+                          if a in mesh.shape and a not in used)
+        if not mesh_axes:
+            out.append(None)
+            continue
+        size = _axes_size(mesh, mesh_axes)
+        if size > 1 and dim % size == 0:
+            out.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+            used.update(mesh_axes)
+        else:
+            # try a prefix of the axes that divides
+            picked = None
+            for k in range(len(mesh_axes), 0, -1):
+                sub = mesh_axes[:k]
+                if dim % _axes_size(mesh, sub) == 0 \
+                        and _axes_size(mesh, sub) > 1:
+                    picked = sub
+                    break
+            if picked:
+                out.append(picked if len(picked) > 1 else picked[0])
+                used.update(picked)
+            else:
+                out.append(None)
+    return P(*out)
+
+
+def is_param_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(key: jax.Array, spec_tree) -> Dict:
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_param_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = []
+    for k, s in zip(keys, leaves):
+        assert isinstance(s, ParamSpec), s
+        if s.init == "zeros":
+            vals.append(jnp.zeros(s.shape, s.dtype))
+        elif s.init == "ones":
+            vals.append(jnp.ones(s.shape, s.dtype))
+        elif s.init == "ssm_a_log":
+            # Mamba A init: log(1..d_state) broadcast over channels
+            n = s.shape[-1]
+            a = jnp.tile(jnp.log(jnp.arange(1, n + 1, dtype=s.dtype)),
+                         s.shape[:-1] + (1,)).reshape(s.shape)
+            vals.append(a)
+        else:
+            fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+            scale = s.scale if s.scale is not None else 1.0 / math.sqrt(
+                max(1, fan_in))
+            vals.append(scale * jax.random.normal(k, s.shape, s.dtype))
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(spec_tree):
+    """ShapeDtypeStruct tree (for dry-run lowering without allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        spec_tree, is_leaf=is_param_spec)
+
+
+def partition_specs(spec_tree, mesh: Mesh, rules: MeshRules):
+    return jax.tree.map(
+        lambda s: spec_for(mesh, rules, s.axes, s.shape),
+        spec_tree, is_leaf=is_param_spec)
+
+
+def shardings(spec_tree, mesh: Mesh, rules: MeshRules):
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, p),
+        partition_specs(spec_tree, mesh, rules),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_count(spec_tree) -> int:
+    leaves, _ = jax.tree.flatten(spec_tree, is_leaf=is_param_spec)
+    return sum(int(math.prod(s.shape)) for s in leaves)
+
+
+def act_spec(mesh: Mesh, rules: MeshRules, *logical: Optional[str]) -> P:
+    """PartitionSpec for an activation given logical axis names."""
+    out = []
+    used: set = set()
+    for lg in logical:
+        axes = tuple(a for a in rules.mesh_axes_for(lg)
+                     if a in mesh.shape and a not in used)
+        if axes:
+            out.append(axes if len(axes) > 1 else axes[0])
+            used.update(axes)
+        else:
+            out.append(None)
+    return P(*out)

@@ -1,0 +1,243 @@
+"""RWKV-6 "Finch" block: data-dependent decay WKV recurrence + channel mix.
+
+Faithfulness notes (recorded in DESIGN.md): the data-dependent per-channel
+decay w_t = exp(-exp(w0 + tanh(x @ A)·B)) — the defining RWKV-6 feature —
+is implemented exactly; the token-shift interpolation uses static per-channel
+mix coefficients (RWKV-5 style) rather than the ddlerp refinement, a
+simplification that does not change the compute/communication shape.
+
+Train: ``lax.scan`` over time, carry S [B,H,hd,hd] (the matrix-valued WKV
+state). Decode: single-step recurrence — O(1) state in sequence length,
+which is why rwkv6 runs the 500k-decode cell.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.module import ParamSpec
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    hd = cfg.ssm.rwkv_head_dim
+    h = cfg.d_model // hd
+    return h, hd, cfg.ssm.rwkv_decay_lora
+
+
+def rwkv_time_spec(cfg: ModelConfig, layers: Optional[int] = None) -> Dict:
+    d = cfg.d_model
+    h, hd, lora = _dims(cfg)
+    lead = (layers,) if layers else ()
+    la: Tuple[Optional[str], ...] = ("layers",) if layers else ()
+    return {
+        "mu": ParamSpec(lead + (5, d), la + (None, "embed"), "normal",
+                        scale=0.02),
+        "wr": ParamSpec(lead + (d, d), la + ("embed", "heads")),
+        "wk": ParamSpec(lead + (d, d), la + ("embed", "heads")),
+        "wv": ParamSpec(lead + (d, d), la + ("embed", "heads")),
+        "wg": ParamSpec(lead + (d, d), la + ("embed", "heads")),
+        "w0": ParamSpec(lead + (d,), la + ("heads",), "normal", scale=0.5),
+        "w_a": ParamSpec(lead + (d, lora), la + ("embed", None)),
+        "w_b": ParamSpec(lead + (lora, d), la + (None, "heads")),
+        "u": ParamSpec(lead + (h, hd), la + ("heads", None), "normal",
+                       scale=0.5),
+        "ln_x": ParamSpec(lead + (d,), la + ("heads",), "ones"),
+        "wo": ParamSpec(lead + (d, d), la + ("heads", "embed")),
+    }
+
+
+def rwkv_channel_spec(cfg: ModelConfig, layers: Optional[int] = None
+                      ) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    lead = (layers,) if layers else ()
+    la: Tuple[Optional[str], ...] = ("layers",) if layers else ()
+    return {
+        "mu": ParamSpec(lead + (2, d), la + (None, "embed"), "normal",
+                        scale=0.02),
+        "wk": ParamSpec(lead + (d, f), la + ("embed", "ffn")),
+        "wv": ParamSpec(lead + (f, d), la + ("ffn", "embed")),
+        "wr": ParamSpec(lead + (d, d), la + ("embed", "ffn")),
+    }
+
+
+def _shift(x: jnp.ndarray, prev: Optional[jnp.ndarray] = None
+           ) -> jnp.ndarray:
+    """Token shift: previous token's features (zeros or ``prev`` at t=0)."""
+    first = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None]
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _decay(p, cfg: ModelConfig, xw: jnp.ndarray) -> jnp.ndarray:
+    dt = cfg.compute_dtype
+    lo = jnp.tanh(jnp.einsum("...d,dl->...l", xw, p["w_a"].astype(dt)))
+    w = p["w0"].astype(jnp.float32) + jnp.einsum(
+        "...l,ld->...d", lo, p["w_b"].astype(dt)).astype(jnp.float32)
+    return jnp.exp(-jnp.exp(w))  # in (0, 1), data-dependent per channel
+
+
+def _group_norm(scale: jnp.ndarray, y: jnp.ndarray, h: int,
+                eps: float = 1e-5) -> jnp.ndarray:
+    """Per-head group norm over the flattened head outputs (RWKV ln_x)."""
+    shp = y.shape
+    yh = y.reshape(shp[:-1] + (h, shp[-1] // h)).astype(jnp.float32)
+    mu = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + eps)
+    return (yh.reshape(shp) * scale).astype(y.dtype)
+
+
+def apply_rwkv_time(p, cfg: ModelConfig, x: jnp.ndarray,
+                    return_state: bool = False):
+    dt = cfg.compute_dtype
+    h, hd, _ = _dims(cfg)
+    b, s, d = x.shape
+    sx = _shift(x) - x
+    mu = p["mu"].astype(dt)
+    xr, xk, xv, xw, xg = (x + sx * mu[i] for i in range(5))
+    from repro.sharding.ctx import shard_act
+    r = shard_act(jnp.einsum("bsd,df->bsf", xr, p["wr"].astype(dt)),
+                  "batch", None, "act_heads")
+    k = shard_act(jnp.einsum("bsd,df->bsf", xk, p["wk"].astype(dt)),
+                  "batch", None, "act_heads")
+    v = shard_act(jnp.einsum("bsd,df->bsf", xv, p["wv"].astype(dt)),
+                  "batch", None, "act_heads")
+    g = shard_act(jnp.einsum("bsd,df->bsf", xg, p["wg"].astype(dt)),
+                  "batch", None, "act_heads")
+    w = _decay(p, cfg, xw)                                   # [B,S,d] f32
+    # PERF: transport r/k/v in bf16 (halves [B,S,d] HBM traffic); the decay
+    # stays f32 — bf16 would corrupt long products (0.999 rounds to 0.996)
+    rh = r.reshape(b, s, h, hd)
+    kh = k.reshape(b, s, h, hd)
+    vh = v.reshape(b, s, h, hd)
+    wh = w.reshape(b, s, h, hd)
+    u = p["u"].astype(jnp.float32)
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp                             # [B,H,hd]
+        k32 = k_t.astype(jnp.float32)
+        v32 = v_t.astype(jnp.float32)
+        kv = k32[..., :, None] * v32[..., None, :]           # [B,H,hd,hd]
+        y_t = jnp.einsum("bhi,bhij->bhj", r_t.astype(jnp.float32),
+                         state + u[..., None] * kv)
+        state = w_t[..., None] * state + kv
+        return state, y_t
+
+    s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (rh, kh, vh, wh))
+    s_last, ys = _recurrence_scan(cfg, step, s0, xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, d).astype(dt)
+    y = _group_norm(p["ln_x"].astype(jnp.float32), y, h)
+    y = y * jax.nn.silu(g)
+    out = jnp.einsum("bsf,fd->bsd", y, p["wo"].astype(dt))
+    if return_state:
+        return out, s_last, x[:, -1]
+    return out
+
+
+def apply_rwkv_channel(p, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    dt = cfg.compute_dtype
+    sx = _shift(x) - x
+    mu = p["mu"].astype(dt)
+    xk, xr = x + sx * mu[0], x + sx * mu[1]
+    from repro.sharding.ctx import shard_act
+    k = jnp.einsum("bsd,df->bsf", xk, p["wk"].astype(dt))
+    k = shard_act(jnp.square(jax.nn.relu(k)), "batch", None, "act_ffn")
+    v = jnp.einsum("bsf,fd->bsd", k, p["wv"].astype(dt))
+    r = jax.nn.sigmoid(jnp.einsum("bsd,df->bsf", xr, p["wr"].astype(dt)))
+    return r * v
+
+
+# ---------------------------------------------------------------------------
+# Decode (O(1) state).
+# ---------------------------------------------------------------------------
+
+def rwkv_state_abstract(cfg: ModelConfig, batch: int, n_layers: int):
+    h, hd, _ = _dims(cfg)
+    d = cfg.d_model
+    return {
+        "wkv": jax.ShapeDtypeStruct((n_layers, batch, h, hd, hd),
+                                    jnp.float32),
+        "shift_t": jax.ShapeDtypeStruct((n_layers, batch, d),
+                                        cfg.compute_dtype),
+        "shift_c": jax.ShapeDtypeStruct((n_layers, batch, d),
+                                        cfg.compute_dtype),
+    }
+
+
+def rwkv_state_init(cfg: ModelConfig, batch: int, n_layers: int):
+    return jax.tree.map(lambda st: jnp.zeros(st.shape, st.dtype),
+                        rwkv_state_abstract(cfg, batch, n_layers))
+
+
+def decode_rwkv_time(p, cfg: ModelConfig, x: jnp.ndarray,
+                     wkv: jnp.ndarray, shift_prev: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x [B,1,d]; wkv [B,H,hd,hd]; shift_prev [B,d]."""
+    dt = cfg.compute_dtype
+    h, hd, _ = _dims(cfg)
+    b, _, d = x.shape
+    xt = x[:, 0]
+    sx = shift_prev - xt
+    mu = p["mu"].astype(dt)
+    xr, xk, xv, xw, xg = (xt + sx * mu[i] for i in range(5))
+    r = jnp.einsum("bd,df->bf", xr, p["wr"].astype(dt))
+    k = jnp.einsum("bd,df->bf", xk, p["wk"].astype(dt))
+    v = jnp.einsum("bd,df->bf", xv, p["wv"].astype(dt))
+    g = jnp.einsum("bd,df->bf", xg, p["wg"].astype(dt))
+    w = _decay(p, cfg, xw).reshape(b, h, hd)
+    rh = r.reshape(b, h, hd).astype(jnp.float32)
+    kh = k.reshape(b, h, hd).astype(jnp.float32)
+    vh = v.reshape(b, h, hd).astype(jnp.float32)
+    u = p["u"].astype(jnp.float32)
+    kv = kh[..., :, None] * vh[..., None, :]
+    y = jnp.einsum("bhi,bhij->bhj", rh, wkv + u[..., None] * kv)
+    wkv_new = w[..., None] * wkv + kv
+    y = y.reshape(b, d).astype(dt)
+    y = _group_norm(p["ln_x"].astype(jnp.float32), y, h)
+    y = y * jax.nn.silu(g)
+    out = jnp.einsum("bf,fd->bd", y, p["wo"].astype(dt))
+    return out[:, None, :], wkv_new, xt
+
+
+def decode_rwkv_channel(p, cfg: ModelConfig, x: jnp.ndarray,
+                        shift_prev: jnp.ndarray
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    dt = cfg.compute_dtype
+    xt = x[:, 0]
+    sx = shift_prev - xt
+    mu = p["mu"].astype(dt)
+    xk, xr = xt + sx * mu[0], xt + sx * mu[1]
+    k = jnp.square(jax.nn.relu(
+        jnp.einsum("bd,df->bf", xk, p["wk"].astype(dt))))
+    v = jnp.einsum("bf,fd->bd", k, p["wv"].astype(dt))
+    r = jax.nn.sigmoid(jnp.einsum("bd,df->bf", xr, p["wr"].astype(dt)))
+    return (r * v)[:, None, :], xt
+
+
+def _recurrence_scan(cfg, step, s0, xs):
+    """Recurrence scan with PERF chunking: with ssm_unroll = C > 1, scan
+    over S/C chunks whose bodies run C unrolled steps under jax.checkpoint —
+    state round-trips amortize C× AND the backward pass saves only per-chunk
+    carries (C× fewer saved recurrence states) instead of all S."""
+    import jax as _jax
+    c = max(1, int(getattr(cfg, "ssm_unroll", 1)))
+    s = _jax.tree.leaves(xs)[0].shape[0]
+    if c <= 1 or s % c != 0:
+        return _jax.lax.scan(step, s0, xs)
+    nc = s // c
+
+    def chunk(state, xc):
+        state, ys = _jax.lax.scan(step, state, xc, unroll=c)
+        return state, ys
+
+    chunk = _jax.checkpoint(chunk, prevent_cse=False)
+    xs_c = _jax.tree.map(
+        lambda a: a.reshape((nc, c) + a.shape[1:]), xs)
+    s_last, ys_c = _jax.lax.scan(chunk, s0, xs_c)
+    ys = _jax.tree.map(
+        lambda a: a.reshape((s,) + a.shape[2:]), ys_c)
+    return s_last, ys

@@ -1,0 +1,85 @@
+"""AdamW with decoupled weight decay — sharded state, no optax dependency.
+
+Optimizer state inherits each parameter's sharding (m/v are elementwise), so
+under the production mesh the Adam moments are distributed exactly like the
+FSDP×TP weights (DESIGN.md §5 memory budget).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    count: jnp.ndarray
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    lr_schedule: str = "cosine"      # cosine | constant
+    total_steps: int = 10_000
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros_like(p)
+        return AdamWState(jnp.zeros((), jnp.int32),
+                          jax.tree.map(zeros, params),
+                          jax.tree.map(zeros, params))
+
+    def _lr_at(self, step: jnp.ndarray) -> jnp.ndarray:
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, s / max(1, self.warmup_steps))
+        if self.lr_schedule == "cosine":
+            t = jnp.clip((s - self.warmup_steps)
+                         / max(1, self.total_steps - self.warmup_steps),
+                         0.0, 1.0)
+            decay = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        else:
+            decay = 1.0
+        return self.lr * warm * decay
+
+    def update(self, grads, state: AdamWState, params
+               ) -> Tuple[Any, AdamWState]:
+        count = state.count + 1
+        lr = self._lr_at(count)
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g,
+                         state.m, grads)
+        v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g),
+                         state.v, grads)
+        c = count.astype(jnp.float32)
+        bc1 = 1 - b1 ** c
+        bc2 = 1 - b2 ** c
+
+        def upd(mm, vv, p):
+            mhat = mm / bc1
+            vhat = vv / bc2
+            step = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay and p.ndim >= 2:  # decay matrices only
+                step = step + self.weight_decay * p
+            return p - lr * step
+
+        new_params = jax.tree.map(upd, m, v, params)
+        return new_params, AdamWState(count, m, v)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), tree), norm

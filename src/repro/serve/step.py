@@ -1,0 +1,45 @@
+"""Serving steps: batched prefill and single-token decode (greedy/sampled)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import api as mapi
+
+
+def make_prefill_step(cfg: ModelConfig, max_seq: int):
+    def prefill_step(params, batch: Dict[str, jnp.ndarray]):
+        logits, caches = mapi.prefill(params, cfg, batch, max_seq)
+        return logits[:, -1:], caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, greedy: bool = True):
+    def decode_step(params, caches, token: jnp.ndarray, pos: jnp.ndarray):
+        logits, caches = mapi.decode_step(params, cfg, caches, token, pos)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return logits, next_tok[:, None], caches
+
+    return decode_step
+
+
+def generate(params, cfg: ModelConfig, prompt: jnp.ndarray, n_new: int,
+             max_seq: int, enc_batch: Optional[Dict] = None
+             ) -> jnp.ndarray:
+    """Greedy generation loop (example-app path, jit-per-step)."""
+    batch = dict(enc_batch or {}, tokens=prompt)
+    prefill = jax.jit(make_prefill_step(cfg, max_seq))
+    step = jax.jit(make_decode_step(cfg))
+    logits, caches = prefill(params, batch)
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    out = [tok]
+    pos0 = prompt.shape[1] + (cfg.n_img_tokens if cfg.family == "vlm" else 0)
+    for i in range(n_new - 1):
+        _, tok, caches = step(params, caches, tok,
+                              jnp.int32(pos0 + i))
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

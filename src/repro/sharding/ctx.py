@@ -1,0 +1,63 @@
+"""Ambient activation-sharding context.
+
+Model code is pure; the launcher (dry-run / trainer) installs the mesh +
+rules here and model layers call ``shard_act(x, *logical_axes)`` at
+materialization points. Without an installed context the calls are no-ops
+(single-device tests). This is what pins activations batch-sharded so the
+GSPMD partitioner gathers WEIGHTS (FSDP) instead of replicating the batch.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.module import MeshRules, act_spec
+
+_STATE = threading.local()
+
+
+def current() -> Optional[Tuple[Mesh, MeshRules]]:
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Mesh, rules: MeshRules):
+    prev = current()
+    _STATE.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def shard_act(x, *logical: Optional[str]):
+    """Constrain an activation to the logical axes (no-op w/o context)."""
+    ctx = current()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if len(logical) != x.ndim:
+        return x
+    spec = _divisible_spec(mesh, rules, logical, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _divisible_spec(mesh, rules, logical, shape) -> P:
+    out = []
+    used: set = set()
+    for dim, lg in zip(shape, logical):
+        axes = tuple(a for a in rules.mesh_axes_for(lg)
+                     if a in mesh.shape and a not in used)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if axes and size > 1 and dim % size == 0:
+            out.append(axes if len(axes) > 1 else axes[0])
+            used.update(axes)
+        else:
+            out.append(None)
+    return P(*out)

@@ -1,0 +1,86 @@
+"""Activation / input / cache partition specs over the production mesh."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.module import MeshRules
+
+
+def _present(mesh: Mesh, axes: Tuple[str, ...]) -> Tuple[str, ...]:
+    return tuple(a for a in axes if a in mesh.shape)
+
+
+def _size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _maybe(mesh: Mesh, axes: Tuple[str, ...], dim: int):
+    axes = _present(mesh, axes)
+    if axes and dim % _size(mesh, axes) == 0 and _size(mesh, axes) > 1:
+        return axes if len(axes) > 1 else axes[0]
+    return None
+
+
+def input_partition_specs(mesh: Mesh, rules: MeshRules,
+                          specs: Dict[str, jax.ShapeDtypeStruct]
+                          ) -> Dict[str, P]:
+    """Batch-shard every model input on its leading dim (pos scalar: repl)."""
+    out = {}
+    for name, s in specs.items():
+        if not s.shape:
+            out[name] = P()
+            continue
+        lead = _maybe(mesh, rules.batch, s.shape[0])
+        out[name] = P(lead, *([None] * (len(s.shape) - 1)))
+    return out
+
+
+def cache_partition_specs(cfg: ModelConfig, mesh: Mesh, rules: MeshRules,
+                          cache_tree) -> Any:
+    """Decode-cache shardings by leaf role.
+
+    Priority per leaf: batch dim → DP axes; heads/channels → tensor axis;
+    when the batch is unshardable (e.g. long_500k B=1), the sequence dim of
+    attention KV takes the DP axes instead (sequence-sharded cache).
+    """
+    def leaf_spec(path: Tuple, leaf) -> P:
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        shape = leaf.shape
+        batch_axes = _present(mesh, rules.batch)
+        tensor_axes = _present(mesh, rules.tensor)
+        b_sh = _maybe(mesh, batch_axes, shape[1]) if len(shape) > 1 else None
+        if name in ("k", "v"):
+            # [L, B, N, H, hd]
+            seq_sh = None if b_sh is not None else _maybe(
+                mesh, batch_axes, shape[2])
+            h_sh = _maybe(mesh, tensor_axes, shape[3])
+            return P(None, b_sh, seq_sh, h_sh, None)
+        if name == "pos":
+            seq_sh = None if b_sh is not None else _maybe(
+                mesh, batch_axes, shape[2])
+            return P(None, b_sh, seq_sh)
+        if name == "conv":      # [L, B, K-1, d_in]
+            return P(None, b_sh, None, _maybe(mesh, tensor_axes, shape[3]))
+        if name == "h":         # [L, B, d_in, N]
+            return P(None, b_sh, _maybe(mesh, tensor_axes, shape[2]), None)
+        if name == "wkv":       # [L, B, H, hd, hd]
+            return P(None, b_sh, _maybe(mesh, tensor_axes, shape[2]),
+                     None, None)
+        if name in ("shift_t", "shift_c"):  # [L, B, d]
+            return P(None, b_sh, None)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_tree)
+
+
+def to_shardings(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

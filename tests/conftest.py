@@ -1,0 +1,23 @@
+import os
+import sys
+
+# smoke tests and benches must see the single real CPU device; only the
+# dry-run launcher (a subprocess in tests) forces 512 host devices
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def sparse(rng, m, n, density, round_vals=False):
+    v = rng.normal(size=(m, n)).astype(np.float32)
+    keep = rng.uniform(size=(m, n)) < density
+    out = np.where(keep, v, 0).astype(np.float32)
+    if round_vals:
+        out = np.round(out, 1)
+    return out

@@ -1,0 +1,133 @@
+"""Communication cost model: paper Tables 1–3 + partitioner optimality."""
+import itertools
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost as C
+from repro.core.predicates import Field, JoinKind, JoinPred, parse_join
+
+N = 6          # workers, as in the paper's cluster
+SA, SB = 1e6, 4e5
+
+
+def cc(pred_text, sa, sb, size_a=SA, size_b=SB, n=N):
+    return C.join_comm_cost(parse_join(pred_text), sa, sb, size_a, size_b, n)
+
+
+# -- Table 1 (D2D), spot-checked against the paper --------------------------
+
+def test_d2d_diagonal_is_zero():
+    """Partitioning schemes matching the predicate ⇒ no communication."""
+    assert cc("RID=RID", "r", "r") == 0
+    assert cc("RID=CID", "r", "c") == 0
+    assert cc("CID=RID", "c", "r") == 0
+    assert cc("CID=CID", "c", "c") == 0
+
+
+def test_d2d_rid_rid_rc():
+    assert cc("RID=RID", "r", "c") == min((N - 1) * SA, (N - 1) / N * SB)
+
+
+def test_d2d_rid_rid_cr():
+    assert cc("RID=RID", "c", "r") == min((N - 1) / N * SA, (N - 1) * SB)
+
+
+def test_d2d_rid_rid_cc():
+    assert cc("RID=RID", "c", "c") == (N - 1) * min(SA, SB)
+
+
+def test_d2d_broadcast_is_free():
+    for g in ("RID=RID", "RID=CID", "CID=RID", "CID=CID"):
+        assert cc(g, "b", "r") == 0
+        assert cc(g, "r", "b") == 0
+
+
+# -- overlays ---------------------------------------------------------------
+
+def test_direct_overlay():
+    assert cc("RID=RID AND CID=CID", "r", "r") == 0
+    assert cc("RID=RID AND CID=CID", "c", "c") == 0
+    assert cc("RID=RID AND CID=CID", "r", "c") == (N - 1) / N * min(SA, SB)
+
+
+def test_transpose_overlay():
+    assert cc("RID=CID AND CID=RID", "r", "c") == 0
+    assert cc("RID=CID AND CID=RID", "r", "r") == (N - 1) / N * min(SA, SB)
+
+
+# -- cross / V2V -------------------------------------------------------------
+
+def test_cross_product_cost():
+    assert cc("CROSS", "r", "c") == (N - 1) * min(SA, SB)
+    assert cc("CROSS", "b", "r") == 0
+    assert cc("VAL=VAL", "r", "r") == (N - 1) * min(SA, SB)
+
+
+# -- Table 2 (D2V / V2D) ------------------------------------------------------
+
+def test_d2v_aligned_vs_misaligned():
+    eta = 0.1
+    aligned = C.join_comm_cost(parse_join("RID=VAL"), "r", "r", SA, SB, N,
+                               eta_b=eta)
+    misaligned = C.join_comm_cost(parse_join("RID=VAL"), "c", "r", SA, SB,
+                                  N, eta_b=eta)
+    assert aligned == min((N - 1) * SA, eta * SB)
+    assert misaligned == min((N - 1) * SA, N * eta * SB)
+    assert aligned <= misaligned
+
+
+def test_v2d_mirrors_d2v():
+    eta = 0.2
+    got = C.join_comm_cost(parse_join("VAL=RID"), "r", "r", SA, SB, N,
+                           eta_a=eta)
+    assert got == min(eta * SA, (N - 1) * SB)
+
+
+# -- Table 3 (conversions) ----------------------------------------------------
+
+def test_conversion_costs():
+    assert C.conversion_cost(SA, "r", "r", N) == 0
+    assert C.conversion_cost(SA, "r", "c", N) == (N - 1) / N * SA
+    assert C.conversion_cost(SA, "r", "b", N) == (N - 1) * SA
+    assert C.conversion_cost(SA, "b", "r", N) == 0
+    assert C.conversion_cost(SA, "xi", "r", N) == SA
+    assert C.conversion_cost(SA, "xi", "b", N) == N * SA
+
+
+# -- partitioner: grid search is optimal --------------------------------------
+
+@settings(max_examples=200, deadline=None)
+@given(
+    kind=st.sampled_from(["RID=RID", "CID=RID", "RID=RID AND CID=CID",
+                          "RID=CID AND CID=RID", "VAL=VAL", "CROSS",
+                          "RID=VAL", "VAL=CID"]),
+    size_a=st.floats(1e2, 1e9),
+    size_b=st.floats(1e2, 1e9),
+    s_a=st.sampled_from(["r", "c", "b", "xi"]),
+    s_b=st.sampled_from(["r", "c", "b", "xi"]),
+    n=st.integers(2, 64),
+)
+def test_assign_schemes_matches_bruteforce(kind, size_a, size_b, s_a, s_b, n):
+    pred = parse_join(kind)
+    choice = C.assign_schemes(pred, size_a, size_b, n, s_a, s_b)
+    # brute force over the same feasible set
+    best = None
+    for sa2, sb2 in itertools.product(C.SCHEMES, C.SCHEMES):
+        if sa2 == C.BCAST and not C.broadcastable(size_a):
+            continue
+        if sb2 == C.BCAST and not C.broadcastable(size_b):
+            continue
+        tot = (C.join_comm_cost(pred, sa2, sb2, size_a, size_b, n)
+               + C.conversion_cost(size_a, s_a, sa2, n)
+               + C.conversion_cost(size_b, s_b, sb2, n))
+        if best is None or tot < best:
+            best = tot
+    assert abs(choice.total - best) < 1e-6 * max(1.0, best)
+
+
+def test_scheme_to_spec():
+    from jax.sharding import PartitionSpec as P
+    assert C.scheme_to_spec("r") == P("data", None)
+    assert C.scheme_to_spec("c") == P(None, "data")
+    assert C.scheme_to_spec("b") == P(None, None)

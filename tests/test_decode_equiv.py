@@ -1,0 +1,85 @@
+"""Prefill → decode handoff equals full forward, for every architecture.
+
+Recurrent bf16 stacks (jamba) accumulate step-order-dependent rounding, so
+hybrid/ssm archs are checked in f32 (algorithmic correctness) while the
+attention archs are checked in bf16 (bitwise path equivalence holds there).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, reduced
+from repro.models import api as mapi
+from repro.models.module import init_params
+
+B, S, MAX = 2, 32, 64
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_matches_forward(arch):
+    cfg = reduced(get_config(arch))
+    if cfg.family in ("hybrid", "ssm"):
+        cfg = dataclasses.replace(cfg, compute_dtype=jnp.float32)
+    params = init_params(jax.random.key(0), mapi.spec(cfg))
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(1, cfg.vocab_size, (B, S + 1)),
+                       jnp.int32)
+    batch = {"tokens": toks[:, :S]}
+    full_batch = {"tokens": toks}
+    if cfg.family == "audio":
+        frames = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)),
+                             jnp.float32)
+        batch["frames"] = frames
+        full_batch["frames"] = frames
+    if cfg.family == "vlm":
+        img = jnp.asarray(
+            rng.normal(size=(B, cfg.n_img_tokens, cfg.img_embed_dim)),
+            jnp.float32)
+        batch["img_embeds"] = img
+        full_batch["img_embeds"] = img
+
+    logits_p, caches = mapi.prefill(params, cfg, batch, MAX)
+    pos = S + (cfg.n_img_tokens if cfg.family == "vlm" else 0)
+    logits_d, _ = mapi.decode_step(params, cfg, caches, toks[:, S:S + 1],
+                                   jnp.int32(pos))
+    logits_f, _ = mapi.forward(params, cfg, full_batch)
+
+    got = np.asarray(logits_d[:, 0], np.float32)
+    want = np.asarray(logits_f[:, -1], np.float32)
+    rel = np.abs(got - want).max() / (np.abs(want).max() + 1e-9)
+    tol = 5e-5 if cfg.compute_dtype == jnp.float32 else 2e-2
+    assert rel < tol, f"{arch}: rel err {rel:.3e}"
+    # prefill logits must agree with the forward pass on shared positions
+    rel_p = (np.abs(np.asarray(logits_p, np.float32)
+                    - np.asarray(logits_f[:, :logits_p.shape[1]],
+                                 np.float32)).max()
+             / (np.abs(np.asarray(logits_f)).max() + 1e-9))
+    assert rel_p < tol, f"{arch}: prefill rel err {rel_p:.3e}"
+
+
+def test_swa_ring_buffer_wraps_correctly():
+    """Decoding past the window: ring-buffer cache must equal full forward."""
+    cfg = dataclasses.replace(reduced(get_config("mixtral-8x7b")),
+                              sliding_window=16, moe=None,
+                              compute_dtype=jnp.float32)
+    params = init_params(jax.random.key(0), mapi.spec(cfg))
+    rng = np.random.default_rng(2)
+    total = 40  # prefill 24, decode 16 more (wraps the 16-slot ring)
+    toks = jnp.asarray(rng.integers(1, cfg.vocab_size, (1, total)),
+                       jnp.int32)
+    logits_p, caches = mapi.prefill(params, cfg, {"tokens": toks[:, :24]},
+                                    max_seq=total)
+    outs = []
+    for i in range(24, total):
+        lg, caches = mapi.decode_step(params, cfg, caches, toks[:, i:i + 1],
+                                      jnp.int32(i))
+        outs.append(np.asarray(lg[0, 0]))
+    logits_f, _ = mapi.forward(params, cfg, {"tokens": toks})
+    for j, i in enumerate(range(24, total)):
+        if i + 1 < total:
+            want = np.asarray(logits_f[0, i])
+            rel = np.abs(outs[j] - want).max() / (np.abs(want).max() + 1e-9)
+            assert rel < 5e-4, (i, rel)

@@ -1,0 +1,62 @@
+"""Dry-run path end-to-end in a subprocess (scaled-down device count).
+
+Exercises the REAL launcher — forced host devices, production-mesh code
+path, lower + compile + memory/cost/HLO analyses — with the mesh scaled to
+8 devices so it runs in seconds. The full 256/512-chip sweep is run by
+``python -m repro.launch.dryrun`` (results in results/dryrun)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_cell(tmp_path, arch, shape, mesh):
+    env = dict(
+        os.environ,
+        PYTHONPATH=os.path.join(ROOT, "src"),
+        REPRO_DRYRUN_DEVICES="8",
+        REPRO_MESH_SINGLE="2,4",
+        REPRO_MESH_MULTI="2,2,2",
+        REPRO_SAVE_HLO="0",
+    )
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", mesh, "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=500, cwd=ROOT)
+    assert out.returncode == 0, out.stderr[-2000:]
+    tag = f"{arch}__{shape}__{mesh}"
+    with open(os.path.join(str(tmp_path), tag + ".json")) as f:
+        return json.load(f)
+
+
+@pytest.mark.slow
+def test_dryrun_train_cell(tmp_path):
+    res = _run_cell(tmp_path, "qwen3-1.7b", "train_4k", "single")
+    assert res["status"] == "ok"
+    r = res["roofline"]
+    assert r["hlo_flops"] > 0 and r["collective_bytes"] > 0
+    assert res["hlo"]["while_trip_counts"]  # scan detected
+    assert 28 in res["hlo"]["while_trip_counts"].values()  # 28 layers
+    assert res["memory_analysis"]["temp_bytes"] > 0
+
+
+@pytest.mark.slow
+def test_dryrun_multi_pod_decode(tmp_path):
+    res = _run_cell(tmp_path, "rwkv6-7b", "decode_32k", "multi")
+    assert res["status"] == "ok"
+    assert res["n_chips"] == 8
+
+
+def test_dryrun_skip_rule(tmp_path):
+    """long_500k on a pure full-attention arch must be skipped, not run."""
+    from repro.configs import SHAPES, cell_supported, get_config
+    ok, reason = cell_supported(get_config("command-r-plus-104b"),
+                                SHAPES["long_500k"])
+    assert not ok and "full-attn" in reason
+    for a in ("rwkv6-7b", "jamba-v0.1-52b", "mixtral-8x7b"):
+        ok, _ = cell_supported(get_config(a), SHAPES["long_500k"])
+        assert ok, a

@@ -1,0 +1,187 @@
+"""Fault tolerance, checkpointing, elastic scaling, data pipeline."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import Checkpointer
+from repro.data.pipeline import DataConfig, PrefetchLoader, \
+    SyntheticCorpus, pack_batches
+from repro.runtime.elastic import rebalance_batch, replan_mesh
+from repro.runtime.fault_tolerance import (
+    FaultCoordinator, HeartbeatMonitor, NodeState,
+)
+from repro.runtime.straggler import StragglerDetector
+
+
+# -- checkpoint ---------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path, rng):
+    ck = Checkpointer(str(tmp_path))
+    tree = {"params": {"w": jnp.asarray(rng.normal(size=(8, 8)),
+                                        jnp.float32)},
+            "step": jnp.asarray(7, jnp.int32)}
+    ck.save(7, tree, blocking=True)
+    like = jax.tree.map(lambda a: np.zeros(a.shape, a.dtype), tree)
+    restored, step = ck.restore(like)
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(tree["params"]["w"]),
+                                  restored["params"]["w"])
+
+
+def test_checkpoint_keeps_latest(tmp_path, rng):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    tree = {"w": jnp.zeros((4,))}
+    for s in (1, 2, 3, 4):
+        ck.save(s, jax.tree.map(lambda a: a + s, tree), blocking=True)
+    assert ck.available() == [3, 4]
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    tree = {"w": jnp.ones((16,))}
+    ck.save(1, tree, blocking=True)
+    d = os.path.join(str(tmp_path), "step_00000001")
+    manifest = json.load(open(os.path.join(d, "manifest.json")))
+    fname = manifest["leaves"]["w"]["file"]
+    arr = np.load(os.path.join(d, fname))
+    arr[0] = 999.0
+    np.save(os.path.join(d, fname), arr)
+    with pytest.raises(IOError):
+        ck.restore({"w": np.zeros((16,), np.float32)})
+
+
+def test_checkpoint_elastic_reshard(tmp_path, rng):
+    """Restore with explicit shardings (the elastic-restart path)."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    ck = Checkpointer(str(tmp_path))
+    tree = {"w": jnp.asarray(rng.normal(size=(8, 4)), jnp.float32)}
+    ck.save(3, tree, blocking=True)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    restored, _ = ck.restore(
+        {"w": np.zeros((8, 4), np.float32)}, shardings=sh)
+    assert restored["w"].sharding == sh["w"]
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))
+
+
+# -- heartbeats / restart policy ----------------------------------------------
+
+def test_heartbeat_failure_detection():
+    t = [0.0]
+    mon = HeartbeatMonitor(["a", "b", "c"], suspect_after=5, fail_after=10,
+                           clock=lambda: t[0])
+    t[0] = 6.0
+    mon.beat("a")
+    mon.sweep()
+    assert mon.nodes["b"].state is NodeState.SUSPECT
+    t[0] = 11.0
+    mon.beat("a")
+    failed = mon.sweep()
+    assert set(failed) == {"b", "c"}
+    assert mon.nodes["a"].state is NodeState.HEALTHY
+
+
+def test_restart_policy_replace_then_shrink():
+    t = [0.0]
+    mon = HeartbeatMonitor(["a", "b", "c", "d"], fail_after=1,
+                           clock=lambda: t[0])
+    co = FaultCoordinator(mon, reserves=["r0"], mesh_granularity=1)
+    t[0] = 2.0
+    mon.beat("a")
+    mon.beat("b")
+    mon.beat("c")
+    mon.sweep()
+    plan = co.plan(last_ckpt_step=42)
+    assert plan.action == "replace" and plan.replacements == ["r0"]
+    assert plan.restore_step == 42
+    # second failure: no reserves left → shrink
+    t[0] = 4.0
+    mon.beat("a")
+    mon.beat("b")
+    mon.beat("r0")
+    mon.sweep()   # c fails
+    plan2 = co.plan()
+    assert plan2.action == "shrink"
+    assert plan2.new_world_size == 3
+
+
+# -- straggler -----------------------------------------------------------------
+
+def test_straggler_detection():
+    hosts = [f"h{i}" for i in range(8)]
+    det = StragglerDetector(hosts, z_threshold=3.0, persist=2)
+    for step in range(6):
+        for h in hosts:
+            det.record(h, 1.0 if h != "h3" else 3.0)
+        rep = det.detect()
+    assert rep.slow_hosts == ["h3"]
+    assert "h3" in rep.reassignment
+
+
+def test_straggler_no_false_positive():
+    hosts = [f"h{i}" for i in range(8)]
+    det = StragglerDetector(hosts)
+    for _ in range(6):
+        for i, h in enumerate(hosts):
+            det.record(h, 1.0 + 0.01 * i)
+    assert det.detect().slow_hosts == []
+
+
+# -- elastic -------------------------------------------------------------------
+
+def test_replan_mesh_keeps_model_parallel():
+    plan = replan_mesh(n_devices=250, model_parallel=16, global_batch=256)
+    assert plan.model == 16
+    assert plan.n_devices % 16 == 0
+    assert 256 % plan.data == 0
+
+
+def test_rebalance_batch_preserves_total():
+    shares = rebalance_batch(256, old_data=16, new_data=15)
+    assert sum(shares) == 256
+    assert max(shares) - min(shares) <= 1
+
+
+# -- data pipeline (MatRel preprocessing) ---------------------------------------
+
+def test_corpus_cleaning_drops_empty_docs():
+    dc = DataConfig(vocab_size=512, seq_len=32, global_batch=4, n_docs=64,
+                    doc_len=64, empty_doc_fraction=0.2, seed=1)
+    corpus = SyntheticCorpus(dc)
+    n_empty = int((corpus.matrix.sum(axis=1) == 0).sum())
+    assert n_empty > 0
+    cleaned = corpus.preprocess()
+    # empty docs removed AND the holdout fold removed
+    n_clean = corpus.matrix.shape[0] - n_empty
+    fold = n_clean // dc.n_folds
+    assert cleaned.shape[0] == n_clean - fold
+    assert (cleaned.sum(axis=1) != 0).all()
+
+
+def test_holdout_disjoint_from_train():
+    dc = DataConfig(vocab_size=512, seq_len=32, global_batch=4, n_docs=64,
+                    doc_len=64, seed=2, holdout_fold=1)
+    corpus = SyntheticCorpus(dc)
+    train = corpus.preprocess()
+    hold = corpus.holdout()
+    train_rows = {r.tobytes() for r in train}
+    assert all(r.tobytes() not in train_rows for r in hold)
+
+
+def test_pack_batches_shapes():
+    dc = DataConfig(vocab_size=512, seq_len=32, global_batch=4, n_docs=64,
+                    doc_len=64, seed=0)
+    b = next(iter(pack_batches(SyntheticCorpus(dc).preprocess(), dc)))
+    assert b["tokens"].shape == (4, 32)
+    assert b["labels"].shape == (4, 32)
+    assert (b["tokens"][:, 1:] == b["labels"][:, :-1]).all()
+
+
+def test_prefetch_loader_yields_all():
+    items = list(PrefetchLoader(iter(range(10)), depth=3))
+    assert items == list(range(10))

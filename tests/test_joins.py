@@ -1,0 +1,149 @@
+"""All five join flavors: sparse (optimized) execution == dense oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.expr import MergeFn
+from repro.core.joins import (
+    join_dense, join_sparse, kronecker_dense, kronecker_sparse,
+)
+from repro.core.matrix import BlockMatrix
+from repro.core.predicates import parse_join
+from repro.core.sparsity import product_merge, sum_merge
+from tests.conftest import sparse
+
+BS = 16
+
+
+def _bm(a):
+    return BlockMatrix.from_dense(jnp.asarray(a), BS)
+
+
+@pytest.fixture(scope="module")
+def mats(rng):
+    return (sparse(rng, 40, 48, 0.15), sparse(rng, 40, 48, 0.1),
+            sparse(rng, 48, 40, 0.1))
+
+
+@pytest.mark.parametrize("merge", [product_merge(), sum_merge(),
+                                   MergeFn("affine", lambda x, y: 2 * x * y + x)])
+def test_direct_overlay(mats, merge):
+    a, b, _ = mats
+    pred = parse_join("RID=RID AND CID=CID")
+    want = np.asarray(join_dense(jnp.asarray(a), jnp.asarray(b), pred, merge))
+    got = join_sparse(_bm(a), _bm(b), pred, merge)
+    np.testing.assert_allclose(np.asarray(got.value), want, atol=1e-5)
+
+
+@pytest.mark.parametrize("merge", [product_merge(), sum_merge()])
+def test_transpose_overlay(mats, merge):
+    a, _, bt = mats
+    pred = parse_join("RID=CID AND CID=RID")
+    want = np.asarray(join_dense(jnp.asarray(a), jnp.asarray(bt), pred,
+                                 merge))
+    got = join_sparse(_bm(a), _bm(bt), pred, merge)
+    np.testing.assert_allclose(np.asarray(got.value), want, atol=1e-5)
+
+
+@pytest.mark.parametrize("pred_s", ["RID=RID", "RID=CID", "CID=RID",
+                                    "CID=CID"])
+def test_d2d_all_dim_pairs(mats, pred_s):
+    a, b, bt = mats
+    bb = bt if "=CID" in pred_s.replace("CID=", "", 1) else b
+    # choose a compatible right matrix for each predicate
+    right = {"RID=RID": b, "RID=CID": bt, "CID=RID": b, "CID=CID": bt}[pred_s]
+    pred = parse_join(pred_s)
+    want = np.asarray(join_dense(jnp.asarray(a), jnp.asarray(right), pred,
+                                 product_merge()))
+    got = join_sparse(_bm(a), _bm(right), pred, product_merge())
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got.to_dense(), want, atol=1e-5)
+
+
+def test_d2d_output_is_order3(mats):
+    a, b, _ = mats
+    got = join_sparse(_bm(a), _bm(b), parse_join("RID=RID"),
+                      product_merge())
+    assert got.order == 3
+    # D1 leads (paper §5.1 layout heuristic)
+    assert got.shape == (40, 48, 48)
+
+
+def test_d2d_aggregation_over_dim(mats):
+    """Join → aggregate pipeline (the paper's tensor-aggregation path)."""
+    a, b, _ = mats
+    t = join_sparse(_bm(a), _bm(b), parse_join("RID=RID"), product_merge())
+    agg = t.aggregate("sum", axis=2)
+    want = np.asarray(join_dense(jnp.asarray(a), jnp.asarray(b),
+                                 parse_join("RID=RID"),
+                                 product_merge())).sum(axis=2)
+    np.testing.assert_allclose(agg, want, atol=1e-4)
+
+
+@pytest.mark.parametrize("use_bloom", [True, False])
+def test_v2v(rng, use_bloom):
+    a = sparse(rng, 30, 30, 0.2, round_vals=True)
+    b = sparse(rng, 25, 35, 0.2, round_vals=True)
+    pred = parse_join("VAL=VAL")
+    want = np.asarray(join_dense(jnp.asarray(a), jnp.asarray(b), pred,
+                                 product_merge()))
+    got = join_sparse(_bm(a), _bm(b), pred, product_merge(),
+                      use_bloom=use_bloom)
+    np.testing.assert_allclose(got.to_dense(), want, atol=1e-5)
+    assert got.nnz > 0  # rounding makes collisions likely
+
+
+def test_d2v(rng):
+    a = sparse(rng, 40, 20, 0.3)
+    b = np.zeros((6, 5), np.float32)
+    b[0, 1], b[2, 2], b[4, 4], b[5, 0] = 3, 7, 39, 39
+    pred = parse_join("RID=VAL")
+    want = np.asarray(join_dense(jnp.asarray(a), jnp.asarray(b), pred,
+                                 product_merge()))
+    got = join_sparse(_bm(a), _bm(b), pred, product_merge())
+    np.testing.assert_allclose(got.to_dense(), want, atol=1e-5)
+
+
+def test_v2d(rng):
+    a = np.zeros((4, 4), np.float32)
+    a[1, 2], a[3, 3] = 5, 2
+    b = sparse(rng, 8, 6, 0.4)
+    pred = parse_join("VAL=RID")
+    want = np.asarray(join_dense(jnp.asarray(a), jnp.asarray(b), pred,
+                                 product_merge()))
+    got = join_sparse(_bm(a), _bm(b), pred, product_merge())
+    np.testing.assert_allclose(got.to_dense(), want, atol=1e-5)
+
+
+def test_cross_product(rng):
+    a = sparse(rng, 8, 6, 0.3)
+    b = sparse(rng, 5, 7, 0.3)
+    pred = parse_join("CROSS")
+    want = np.asarray(join_dense(jnp.asarray(a), jnp.asarray(b), pred,
+                                 product_merge()))
+    got = join_sparse(_bm(a), _bm(b), pred, product_merge())
+    assert got.order == 4
+    np.testing.assert_allclose(got.to_dense(), want, atol=1e-5)
+
+
+def test_kronecker_equals_numpy(rng):
+    a = sparse(rng, 9, 7, 0.3)
+    b = sparse(rng, 6, 8, 0.3)
+    want = np.kron(a, b)
+    got_s = kronecker_sparse(_bm(a), _bm(b))
+    got_d = np.asarray(kronecker_dense(jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_allclose(got_s.to_dense(), want, atol=1e-5)
+    np.testing.assert_allclose(got_d, want, atol=1e-5)
+
+
+def test_sparsity_inducing_skips_work(rng):
+    """Product merge on disjoint supports produces an empty result without
+    touching dense blocks (the paper's §4.7 skip)."""
+    a = np.zeros((32, 32), np.float32)
+    a[:16] = 1.0
+    b = np.zeros((32, 32), np.float32)
+    b[16:] = 1.0
+    got = join_sparse(_bm(a), _bm(b), parse_join("RID=RID AND CID=CID"),
+                      product_merge())
+    assert int(np.asarray(got.nnz())) == 0
+    assert int(np.asarray(got.nnz_blocks())) == 0

@@ -1,0 +1,96 @@
+"""Property-based invariants of the whole optimizer (hypothesis).
+
+For RANDOM plans over random matrices:
+  1. the optimized plan evaluates to the same result as the naive plan;
+  2. the estimated cost never regresses;
+  3. sparse-tier execution equals dense-tier execution.
+"""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import Session
+from repro.core.api import Matrix
+
+DIMS = (12, 16)
+
+
+def _rand_matrix(draw, rng_seed, density):
+    rng = np.random.default_rng(rng_seed)
+    v = rng.normal(size=DIMS).astype(np.float32)
+    keep = rng.uniform(size=DIMS) < density
+    return np.where(keep, v, 0).astype(np.float32)
+
+
+@st.composite
+def plans(draw):
+    """A random pipeline of unary/binary ops ending in an aggregation."""
+    seed = draw(st.integers(0, 2**16))
+    density = draw(st.sampled_from([0.1, 0.5, 1.0]))
+    s = Session(block_size=8)
+    a = s.load(_rand_matrix(draw, seed, density))
+    b = s.load(_rand_matrix(draw, seed + 1, density))
+    mx = a
+    square = False
+    n_ops = draw(st.integers(1, 4))
+    for _ in range(n_ops):
+        op = draw(st.sampled_from(
+            ["t", "scalar_add", "scalar_mul", "ewadd", "ewmul", "matmul",
+             "select_row", "select_val"]))
+        if op == "t":
+            mx = mx.t()
+        elif op == "scalar_add":
+            mx = mx.add(draw(st.sampled_from([-1.5, 0.5, 2.0])))
+        elif op == "scalar_mul":
+            mx = mx.emul(draw(st.sampled_from([-2.0, 0.5, 3.0])))
+        elif op == "ewadd" and mx.plan.shape == b.plan.shape:
+            mx = mx.add(b)
+        elif op == "ewmul" and mx.plan.shape == b.plan.shape:
+            mx = mx.emul(b)
+        elif op == "matmul":
+            if mx.plan.shape[1] == b.plan.shape[0]:
+                mx = mx.multiply(b)
+            elif mx.plan.shape[1] == b.plan.shape[1]:
+                mx = mx.multiply(b.t())
+        elif op == "select_row":
+            hi = mx.plan.shape[0] - 1
+            if hi >= 1:
+                mx = mx.select(f"RID={draw(st.integers(0, hi))}")
+        elif op == "select_val":
+            mx = mx.select("VAL>0")
+    fn = draw(st.sampled_from(["sum", "nnz", "avg", "max", "min"]))
+    dim = draw(st.sampled_from(["r", "c", "a"]))
+    return mx.agg(fn, dim)
+
+
+@settings(max_examples=60, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow,
+                                 HealthCheck.data_too_large])
+@given(mx=plans())
+def test_optimized_equals_naive(mx: Matrix):
+    naive = np.asarray(mx.collect(optimize=False).value)
+    opt = np.asarray(mx.collect(optimize=True).value)
+    np.testing.assert_allclose(opt, naive, atol=1e-3, rtol=1e-3)
+
+
+@settings(max_examples=60, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow,
+                                 HealthCheck.data_too_large])
+@given(mx=plans())
+def test_cost_monotone(mx: Matrix):
+    res = mx.optimized_plan()
+    assert res.optimized_cost <= res.original_cost + 1e-6
+
+
+@settings(max_examples=30, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow,
+                                 HealthCheck.data_too_large])
+@given(mx=plans())
+def test_sparse_tier_equals_dense_tier(mx: Matrix):
+    sparse_out = np.asarray(mx.session.execute(mx.plan).value)
+    mx.session.mode = "dense"
+    try:
+        dense_out = np.asarray(mx.session.execute(mx.plan).value)
+    finally:
+        mx.session.mode = "sparse"
+    np.testing.assert_allclose(sparse_out, dense_out, atol=1e-3, rtol=1e-3)

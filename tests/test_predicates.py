@@ -1,0 +1,80 @@
+"""Predicate algebra: parsing, classification, range extraction (§3.2/§4)."""
+import pytest
+
+from repro.core.predicates import (
+    CmpOp, Field, JoinKind, parse_join, parse_select,
+)
+
+
+def test_parse_point_select():
+    p = parse_select("RID=3")
+    assert p.eq_dim(Field.RID) == 3
+    assert p.dim_range(Field.RID) == (3, 3)
+    assert p.is_dims_only()
+
+
+def test_parse_conjunction():
+    p = parse_select("RID=1 AND CID=2")
+    assert p.eq_dim(Field.RID) == 1
+    assert p.eq_dim(Field.CID) == 2
+
+
+def test_parse_range():
+    p = parse_select("RID>=2 AND RID<=7")
+    assert p.dim_range(Field.RID) == (2, 7)
+    p2 = parse_select("RID>2 AND RID<7")
+    assert p2.dim_range(Field.RID) == (3, 6)
+
+
+def test_parse_val_pred():
+    p = parse_select("VAL>0.5")
+    assert p.is_val_only() and not p.is_dims_only()
+
+
+def test_parse_mixed():
+    p = parse_select("VAL=10 AND RID=5")
+    assert p.eq_dim(Field.RID) == 5
+    assert len(p.val_atoms()) == 1
+
+
+def test_parse_diagonal():
+    assert parse_select("RID=CID").is_diagonal()
+
+
+def test_parse_special():
+    assert parse_select("rows != NULL").special is not None
+    assert parse_select("cols != NULL").special is not None
+
+
+def test_constant_on_left_normalized():
+    p = parse_select("VAL>=3")
+    a = p.atoms[0]
+    assert a.lhs is Field.VAL and a.op is CmpOp.GE
+
+
+@pytest.mark.parametrize("text,kind", [
+    ("RID=RID AND CID=CID", JoinKind.DIRECT_OVERLAY),
+    ("RID=CID AND CID=RID", JoinKind.TRANSPOSE_OVERLAY),
+    ("RID=RID", JoinKind.D2D),
+    ("CID=RID", JoinKind.D2D),
+    ("VAL=VAL", JoinKind.V2V),
+    ("RID=VAL", JoinKind.D2V),
+    ("VAL=CID", JoinKind.V2D),
+    ("CROSS", JoinKind.CROSS),
+])
+def test_join_classification(text, kind):
+    assert parse_join(text).kind is kind
+
+
+def test_join_output_order():
+    """d = 4 − δ_dim (paper §4.1)."""
+    assert parse_join("CROSS").output_order == 4
+    assert parse_join("VAL=VAL").output_order == 4
+    assert parse_join("RID=VAL").output_order == 4
+    assert parse_join("RID=RID").output_order == 3
+    assert parse_join("RID=RID AND CID=CID").output_order == 2
+
+
+def test_invalid_join_rejected():
+    with pytest.raises(ValueError):
+        parse_join("RID=RID AND RID=CID")
