@@ -52,7 +52,32 @@ print(json.dumps(out))
 """
 
 
+def _kernel_backends(rng) -> None:
+    """Overlay-join kernel through the registry, per available backend
+    (dense oracle vs pallas-interpret on CPU; pallas-tpu when present)."""
+    from repro.kernels import registry
+    from repro.kernels.merge_join import MODE_BOTH
+
+    m = n = 512
+    bs = 128
+    a = jnp.asarray(sparse(rng, m, n, 0.05))
+    b = jnp.asarray(sparse(rng, m, n, 0.05))
+    ma = BlockMatrix.from_dense(a, bs).block_mask
+    mb = BlockMatrix.from_dense(b, bs).block_mask
+
+    def mul(x, y):  # one fn object: merge is a static jit arg — a fresh
+        return x * y  # lambda per rep would retrace every timing call
+
+    for backend in registry.available_backends():
+        t = timeit(lambda: registry.dispatch(
+            "merge_join", a, b, ma, mb, backend=backend,
+            merge=mul, mode=MODE_BOTH, block_size=bs),
+            repeats=2)
+        row(f"fig11_merge_join_kernel_{backend}", t, f"{m}x{n} bs={bs}")
+
+
 def run(rng) -> None:
+    _kernel_backends(rng)
     m = n = 2500
     a = sparse(rng, m, n, 1e-3)
     b = sparse(rng, m, n, 1e-3)

@@ -1,15 +1,83 @@
 """Roofline report: aggregates the dry-run cell JSONs into the §Roofline
 table rows (per arch × shape × mesh; compute/memory/collective seconds,
-dominant term, usefulness ratio, MFU)."""
+dominant term, usefulness ratio, MFU), plus registry-kernel tile tuning:
+autotuned vs default tile timings and the autotune disk-cache round-trip."""
 import json
 import os
 
-from benchmarks.common import row
+import numpy as np
+
+from benchmarks.common import row, timeit
 
 DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_OUT", "results/dryrun")
 
 
+def _kernel_tiles(rng) -> None:
+    """Time the registry kernels at default vs autotuned tiles.
+
+    On CPU this runs the pallas-interpret backend, where tile size sets the
+    grid-step count the interpreter walks — a real (if proxy) tuning
+    signal; on TPU the same code times the compiled Mosaic kernel.
+    """
+    import jax.numpy as jnp
+    from repro.kernels import autotune, registry
+
+    avail = registry.available_backends()
+    backend = registry.TPU if registry.TPU in avail else (
+        registry.INTERPRET if registry.INTERPRET in avail else registry.DENSE)
+
+    m = k = n = 128
+    bs = 32
+    a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    mask = jnp.asarray(rng.uniform(size=(m // bs, n // bs)) < 0.6)
+    vals = jnp.asarray(rng.normal(size=(8192,)), jnp.float32)
+    words = jnp.zeros((1 << 12) // 32, jnp.uint32)
+
+    cases = {
+        "masked_matmul": lambda tiles: registry.dispatch(
+            "masked_matmul", a, b, mask, backend=backend, block_size=bs,
+            tiles=tiles),
+        "bloom_probe": lambda tiles: registry.dispatch(
+            "bloom_probe", words, vals, backend=backend, num_hashes=3,
+            log2_bits=12, tiles=tiles),
+    }
+    shapes = {
+        "masked_matmul": [a.shape, b.shape, mask.shape],
+        "bloom_probe": [words.shape, vals.shape],
+    }
+    # drop candidates the impls would clamp to the same effective tiling
+    # (bk > K, bs > n) — they'd be duplicate timings cached under
+    # misleading un-clamped values
+    grids = {
+        "masked_matmul": [t for t in registry.get(
+            "masked_matmul").tile_grid if t["bk"] <= k],
+        "bloom_probe": [t for t in registry.get(
+            "bloom_probe").tile_grid if t["bs"] <= vals.shape[0]],
+    }
+    for name, runner in cases.items():
+        spec = registry.get(name)
+        default = dict(spec.default_tiles or {})
+        t_def = timeit(lambda: runner(default), repeats=2)
+        best = autotune.best_tiles(name, shapes[name], "float32", backend,
+                                   runner=runner, grid=grids[name])
+        t_tuned = timeit(lambda: runner(best), repeats=2)
+        row(f"kernel_{name}_default_tiles", t_def,
+            f"backend={backend} tiles={default}")
+        row(f"kernel_{name}_autotuned_tiles", t_tuned,
+            f"tiles={best} speedup={t_def / max(t_tuned, 1e-9):.2f}x")
+
+        # disk round-trip: the tuned entry must survive an in-process wipe
+        autotune.save_cache()
+        autotune.clear_cache()
+        hit = autotune.cached_tiles(name, shapes[name], "float32", backend)
+        row(f"kernel_{name}_cache_roundtrip", None,
+            "hit" if hit == best else f"MISS({hit}!={best})")
+
+
 def run(rng=None) -> None:
+    rng = rng if rng is not None else np.random.default_rng(0)
+    _kernel_tiles(rng)
     if not os.path.isdir(DRYRUN_DIR):
         row("roofline", None, "no dry-run results yet; run "
             "`python -m repro.launch.dryrun`")

@@ -15,7 +15,7 @@ ignore absent entries.
 """
 from __future__ import annotations
 
-from typing import Dict, Union
+from typing import Dict, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -106,12 +106,16 @@ def select_dense(v: jnp.ndarray, pred: Conjunction) -> jnp.ndarray:
 
 class Executor:
     def __init__(self, env: Dict[str, BlockMatrix], mode: str = "sparse",
-                 block_size: int = 256, use_bloom: bool = True):
+                 block_size: int = 256, use_bloom: bool = True,
+                 kernel_backend: Optional[str] = None):
         assert mode in ("sparse", "dense")
         self.env = env
         self.mode = mode
         self.block_size = block_size
         self.use_bloom = use_bloom
+        # None → registry capability detection (pallas-tpu on TPU, else
+        # dense); set explicitly to pin e.g. "pallas-interpret" for testing
+        self.kernel_backend = kernel_backend
         self.stats: Dict[str, int] = {"masked_matmuls": 0, "joins": 0}
 
     # -- public ---------------------------------------------------------------
@@ -181,9 +185,10 @@ class Executor:
                     sp = self._as_matrix(self._eval(sparse_side))
                     w = self._as_matrix(self._eval(mm_side.a))
                     h = self._as_matrix(self._eval(mm_side.b))
-                    from repro.kernels import ops as kops
-                    prod = kops.masked_matmul(
-                        w.value, h.value, sp.block_mask,
+                    from repro.kernels import registry
+                    prod = registry.dispatch(
+                        "masked_matmul", w.value, h.value, sp.block_mask,
+                        backend=self.kernel_backend,
                         block_size=self.block_size)
                     self.stats["masked_matmuls"] += 1
                     if e.op is EWOp.MUL:
@@ -217,7 +222,8 @@ class Executor:
             vals = np.asarray(out)[tuple(idx.T)]
             return COOTensor(idx, vals, tuple(out.shape))
         return joinsmod.join_sparse(a, b, e.pred, e.merge,
-                                    use_bloom=self.use_bloom)
+                                    use_bloom=self.use_bloom,
+                                    kernel_backend=self.kernel_backend)
 
 
 def execute(plan: Expr, env: Dict[str, BlockMatrix],

@@ -208,7 +208,8 @@ def kronecker_sparse(a: BlockMatrix, b: BlockMatrix,
 
 
 def overlay_sparse(a: BlockMatrix, b: BlockMatrix, merge: MergeFn,
-                   transpose: bool = False) -> BlockMatrix:
+                   transpose: bool = False,
+                   kernel_backend: Optional[str] = None) -> BlockMatrix:
     """Block-skip overlay: compute only blocks allowed by the merge profile.
 
     Output block mask:  inducing on both ⇒ maskA & maskB; on x ⇒ maskA;
@@ -230,14 +231,27 @@ def overlay_sparse(a: BlockMatrix, b: BlockMatrix, merge: MergeFn,
     else:
         out_mask = np.ones_like(amask)
     # adaptive execution: when most blocks are live, the block gather/
-    # scatter machinery is pure overhead — evaluate the merge densely
-    # (the paper reports the same parity for direct overlays, Fig. 10)
+    # scatter machinery is pure overhead — evaluate the merge as one
+    # block-masked kernel over the full matrices (the paper reports the
+    # same parity for direct overlays, Fig. 10)
     if out_mask.mean() > 0.5:
-        out = jnp.where(
-            jnp.repeat(jnp.repeat(jnp.asarray(out_mask), bs, 0), bs, 1)
-            [: a.shape[0], : a.shape[1]],
-            merge.fn(a.value, bval), 0.0) if not out_mask.all() \
-            else merge.fn(a.value, bval)
+        if out_mask.all():
+            out = merge.fn(a.value, bval)
+        else:
+            from repro.kernels import registry
+            from repro.kernels.merge_join import MODE_BOTH, MODE_X, MODE_Y
+            # a partial out_mask implies the merge induces on some side
+            # (the non-inducing case sets out_mask all-ones, handled above)
+            if prof.inducing_x and prof.inducing_y:
+                mode = MODE_BOTH
+            elif prof.inducing_x:
+                mode = MODE_X
+            else:
+                mode = MODE_Y
+            out = registry.dispatch(
+                "merge_join", a.value, bval, jnp.asarray(amask),
+                jnp.asarray(bmask), backend=kernel_backend,
+                merge=merge.fn, mode=mode, block_size=bs)
         return BlockMatrix(out, jnp.asarray(out_mask), bs, a.scheme)
     ib, jb = np.nonzero(out_mask)
     out = jnp.zeros(a.shape, a.dtype)
@@ -314,7 +328,7 @@ def d2d_sparse(a: BlockMatrix, b: BlockMatrix, left: Field, right: Field,
 def v2v_sparse(a: BlockMatrix, b: BlockMatrix, merge: MergeFn,
                use_bloom: bool = True,
                bloom_params: bloommod.BloomParams = bloommod.BloomParams(),
-               ) -> COOTensor:
+               kernel_backend: Optional[str] = None) -> COOTensor:
     """Entry join with Bloom pre-filter + sort-merge on exact values (§4.5/§4.7).
 
     The Bloom filter is built over the (nonzero, if sparsity-inducing) entries
@@ -330,9 +344,14 @@ def v2v_sparse(a: BlockMatrix, b: BlockMatrix, merge: MergeFn,
         bi = np.argwhere(np.ones_like(bdense, bool))
         bv = bdense[tuple(bi.T)]
     if use_bloom and av.size and bv.size:
+        from repro.kernels import registry
         filt = bloommod.build(jnp.asarray(bv), bloom_params,
                               skip_zeros=skip_zeros)
-        hits = np.asarray(bloommod.probe(filt, jnp.asarray(av), bloom_params))
+        hits = np.asarray(registry.dispatch(
+            "bloom_probe", filt, jnp.asarray(av),
+            backend=kernel_backend,
+            num_hashes=bloom_params.num_hashes,
+            log2_bits=bloom_params.log2_bits))
         ai, av = ai[hits], av[hits]
     if av.size == 0 or bv.size == 0:
         return COOTensor(np.zeros((0, 4), np.int64), np.zeros((0,)),
@@ -392,18 +411,22 @@ def d2v_sparse(a: BlockMatrix, b: BlockMatrix, dim: Field,
 
 
 def join_sparse(a: BlockMatrix, b: BlockMatrix, pred: JoinPred,
-                merge: MergeFn, use_bloom: bool = True):
+                merge: MergeFn, use_bloom: bool = True,
+                kernel_backend: Optional[str] = None):
     k = pred.kind
     if k is JoinKind.CROSS:
         return cross_sparse(a, b, merge)
     if k is JoinKind.DIRECT_OVERLAY:
-        return overlay_sparse(a, b, merge, transpose=False)
+        return overlay_sparse(a, b, merge, transpose=False,
+                              kernel_backend=kernel_backend)
     if k is JoinKind.TRANSPOSE_OVERLAY:
-        return overlay_sparse(a, b, merge, transpose=True)
+        return overlay_sparse(a, b, merge, transpose=True,
+                              kernel_backend=kernel_backend)
     if k is JoinKind.D2D:
         return d2d_sparse(a, b, pred.left, pred.right, merge)
     if k is JoinKind.V2V:
-        return v2v_sparse(a, b, merge, use_bloom=use_bloom)
+        return v2v_sparse(a, b, merge, use_bloom=use_bloom,
+                          kernel_backend=kernel_backend)
     if k is JoinKind.D2V:
         return d2v_sparse(a, b, pred.left, merge)
     if k is JoinKind.V2D:

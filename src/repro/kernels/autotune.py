@@ -1,0 +1,193 @@
+"""Block-size autotuner for registry kernels.
+
+Entries are keyed by ``(kernel, shape-bucket, dtype, backend)`` — shapes are
+bucketed to the next power of two per dimension so one timing run covers a
+neighborhood of problem sizes instead of every exact shape. Results live in
+an in-process dict backed by an on-disk JSON cache so tuning survives
+process restarts (and can be shipped with a deployment).
+
+Two entry points:
+
+* ``best_tiles`` — full lookup: in-process cache → disk cache → run the
+  timing search over the kernel's tile grid (when a ``runner`` is given) →
+  fall back to the kernel's default tiles. Timing failures (e.g. a tile
+  shape the backend rejects) skip that candidate; if every candidate fails,
+  the default tiles are returned and nothing is cached.
+* ``cached_tiles`` — cache-only lookup used by ``registry.dispatch`` on the
+  hot path: never times, returns None on miss.
+
+Cache invalidation: the JSON schema is versioned (``_schema``); bumping
+``_SCHEMA`` orphans old files. Deleting the file (or pointing
+``REPRO_AUTOTUNE_CACHE`` elsewhere) retunes from scratch.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+Tiles = Dict[str, int]
+
+_SCHEMA = 1
+_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+_CACHE: Dict[str, Tiles] = {}
+_DISK_LOADED_FROM: Optional[str] = None
+
+
+def cache_path() -> str:
+    # CWD-relative results/ by default, matching REPRO_DRYRUN_OUT's
+    # convention; deployments point REPRO_AUTOTUNE_CACHE at a shared file
+    return os.environ.get(_CACHE_ENV,
+                          os.path.join("results", "autotune.json"))
+
+
+def shape_bucket(shapes: Sequence[Sequence[int]]) -> Tuple[Tuple[int, ...],
+                                                           ...]:
+    """Round every dim up to the next power of two (min 1)."""
+    def up(d: int) -> int:
+        d = max(int(d), 1)
+        return 1 << (d - 1).bit_length()
+
+    return tuple(tuple(up(d) for d in s) for s in shapes)
+
+
+def cache_key(kernel: str, shapes: Sequence[Sequence[int]], dtype: str,
+              backend: str) -> str:
+    bucket = "x".join(",".join(map(str, s)) for s in shape_bucket(shapes))
+    return f"{kernel}|{bucket}|{dtype}|{backend}"
+
+
+# ---------------------------------------------------------------------------
+# Disk round-trip.
+# ---------------------------------------------------------------------------
+
+def load_cache(path: Optional[str] = None) -> Dict[str, Tiles]:
+    """Merge the on-disk cache into the in-process one (disk wins on miss
+    only; in-process entries are fresher). Corrupt/mismatched files are
+    ignored — the tuner just re-times."""
+    global _DISK_LOADED_FROM
+    path = path or cache_path()
+    _DISK_LOADED_FROM = path
+    try:
+        with open(path) as f:
+            blob = json.load(f)
+        if blob.get("_schema") != _SCHEMA:
+            return _CACHE
+        for k, v in blob.get("entries", {}).items():
+            _CACHE.setdefault(k, {str(n): int(b) for n, b in v.items()})
+    except (OSError, ValueError):
+        pass
+    return _CACHE
+
+
+def save_cache(path: Optional[str] = None) -> str:
+    path = path or cache_path()
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump({"_schema": _SCHEMA, "entries": _CACHE}, f, indent=1,
+                  sort_keys=True)
+    os.replace(tmp, path)
+    return path
+
+
+def clear_cache(in_process_only: bool = True) -> None:
+    global _DISK_LOADED_FROM
+    _CACHE.clear()
+    _DISK_LOADED_FROM = None  # next cache-only lookup re-reads the disk
+    if not in_process_only:
+        try:
+            os.remove(cache_path())
+        except OSError:
+            pass
+
+
+# ---------------------------------------------------------------------------
+# Lookup / search.
+# ---------------------------------------------------------------------------
+
+def cached_tiles(kernel: str, shapes: Sequence[Sequence[int]], dtype: str,
+                 backend: str) -> Optional[Tiles]:
+    """Cache-only lookup (in-process, then disk once per process)."""
+    key = cache_key(kernel, shapes, dtype, backend)
+    if key not in _CACHE and _DISK_LOADED_FROM != cache_path():
+        load_cache()
+    hit = _CACHE.get(key)
+    return dict(hit) if hit is not None else None  # callers may mutate
+
+
+def time_candidate(fn: Callable[[], object], repeats: int = 2,
+                   warmup: int = 1) -> float:
+    """Median wall seconds of ``fn()`` (which must block until ready)."""
+    import jax
+    for _ in range(warmup):
+        r = fn()
+        if r is not None:
+            jax.block_until_ready(r)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        r = fn()
+        if r is not None:
+            jax.block_until_ready(r)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def best_tiles(kernel: str, shapes: Sequence[Sequence[int]], dtype: str,
+               backend: str, *,
+               runner: Optional[Callable[[Tiles], object]] = None,
+               grid: Optional[Sequence[Tiles]] = None,
+               default: Optional[Tiles] = None,
+               repeats: int = 2,
+               persist: bool = True,
+               force_retune: bool = False) -> Tiles:
+    """Resolve the best tile sizes for one (kernel, shapes, dtype, backend).
+
+    ``runner(tiles)`` executes the kernel once with the candidate tiles and
+    returns its (blockable) output; candidates whose runner raises are
+    skipped. With no runner — or when every candidate fails — the kernel's
+    ``default`` tiles are returned unchanged and NOT cached, so a later
+    caller that can time still gets the chance to.
+    """
+    from repro.kernels import registry
+    spec = registry.get(kernel) if grid is None or default is None else None
+    if grid is None:
+        grid = spec.tile_grid if spec else ()
+    if default is None:
+        default = dict(spec.default_tiles or {}) if spec else {}
+
+    key = cache_key(kernel, shapes, dtype, backend)
+    if not force_retune:
+        hit = cached_tiles(kernel, shapes, dtype, backend)
+        if hit is not None:
+            return hit
+    if runner is None or not grid:
+        return dict(default)
+
+    best: Optional[Tiles] = None
+    best_t = float("inf")
+    seen = set()
+    for cand in grid:
+        cand = dict(cand)
+        fp = tuple(sorted(cand.items()))
+        if fp in seen:  # duplicate candidate (e.g. a pre-clamped grid)
+            continue
+        seen.add(fp)
+        try:
+            t = time_candidate(lambda: runner(cand), repeats=repeats)
+        except Exception:
+            continue  # tile shape this backend/problem rejects
+        if t < best_t:
+            best, best_t = cand, t
+    if best is None:
+        return dict(default)
+    _CACHE[key] = best
+    if persist:
+        try:
+            save_cache()
+        except OSError:
+            pass  # read-only FS: keep the in-process entry
+    return dict(best)

@@ -15,10 +15,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.bloom import _MULTIPLIERS
+from repro.kernels import compat
+from repro.kernels.compat import pl
 
 
 def _hash(keys: jnp.ndarray, i: int, log2_bits: int) -> jnp.ndarray:
@@ -67,8 +67,8 @@ def bloom_probe_pallas(words: jnp.ndarray, vals: jnp.ndarray, *,
         ],
         out_specs=pl.BlockSpec((1, bs), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n // bs, bs), jnp.bool_),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel",)),
         interpret=interpret,
+        **compat.compiler_params_kwargs(
+            dimension_semantics=("parallel",)),
     )(words, vals2)
     return out.reshape(n)

@@ -17,8 +17,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compat
+from repro.kernels.compat import pl
 
 
 def _kernel(mask_ref, a_ref, b_ref, out_ref, *, nk: int):
@@ -63,8 +64,7 @@ def masked_matmul_pallas(a: jnp.ndarray, b: jnp.ndarray, mask: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel",
-                                             "arbitrary")),
         interpret=interpret,
+        **compat.compiler_params_kwargs(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(mask, a, b).astype(a.dtype)

@@ -17,8 +17,9 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compat
+from repro.kernels.compat import pl
 
 # compute-gating modes derived from the sparsity profile of the merge fn
 MODE_BOTH = 0   # inducing on x and y: compute where maskA & maskB
@@ -70,7 +71,7 @@ def merge_join_pallas(a: jnp.ndarray, b: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda mi, ni: (mi, ni)),
         out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
+        **compat.compiler_params_kwargs(
+            dimension_semantics=("parallel", "parallel")),
     )(mask_a, mask_b, a, b)

@@ -1,28 +1,47 @@
-"""Public jit'd wrappers for the Pallas kernels.
+"""Public kernel wrappers + registration of the built-in registry entries.
 
-Dispatch policy: on TPU backends the Pallas kernels run compiled; elsewhere
-(this CPU container) the wrappers default to the pure-jnp reference path for
-speed, with ``force="pallas"`` running the kernels in interpret mode (used by
-the kernel test suite to validate the kernel bodies themselves).
+Each logical kernel is registered under three backends (see
+``repro.kernels.registry``): the pure-jnp ``dense`` oracle from ``ref.py``,
+the Pallas body under the interpreter (``pallas-interpret``), and the
+compiled Mosaic kernel (``pallas-tpu``). The module-level functions keep
+the historical call-sites working (``force="ref"/"pallas"``) by translating
+``force`` to a backend and going through ``registry.dispatch``.
+
+Padding/alignment lives here, not in the kernel bodies: callers hand
+arbitrary shapes, the backend impls pad to tile multiples and slice back.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref as refmod
+from repro.kernels import registry
 from repro.kernels.bloom_probe import bloom_probe_pallas
 from repro.kernels.masked_matmul import masked_matmul_pallas
 from repro.kernels.merge_join import (
     MODE_ALL, MODE_BOTH, MODE_X, MODE_Y, merge_join_pallas,
 )
 
+Tiles = Optional[Dict[str, int]]
+
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _force_to_backend(force: Optional[str]) -> Optional[str]:
+    """Translate the historical ``force`` arg to a registry backend."""
+    if force is None:
+        return None  # registry default: pallas-tpu on TPU, else dense
+    if force == "ref":
+        return registry.DENSE
+    if force == "pallas":
+        return registry.TPU if _on_tpu() else registry.INTERPRET
+    return force  # already a backend name
 
 
 def _pad_to(x: jnp.ndarray, mult0: int, mult1: int) -> jnp.ndarray:
@@ -33,64 +52,175 @@ def _pad_to(x: jnp.ndarray, mult0: int, mult1: int) -> jnp.ndarray:
     return x
 
 
+# ---------------------------------------------------------------------------
+# masked_matmul — block-gated A×B (the PNMF SDDMM pattern, paper §6).
+# ---------------------------------------------------------------------------
+
+_MM_TILE_GRID = ({"bk": 64}, {"bk": 128}, {"bk": 256}, {"bk": 512})
+_MM_DEFAULT_TILES = {"bk": 256}
+
+
+@registry.register("masked_matmul", registry.DENSE,
+                   tile_grid=_MM_TILE_GRID, default_tiles=_MM_DEFAULT_TILES)
+def _masked_matmul_dense(a, b, out_block_mask, *, block_size: int = 256,
+                         tiles: Tiles = None):
+    return refmod.masked_matmul_ref(a, b, out_block_mask, block_size,
+                                    block_size)
+
+
+def _masked_matmul_pallas(a, b, out_block_mask, *, block_size: int,
+                          tiles: Tiles, interpret: bool):
+    m, k = a.shape
+    _, n = b.shape
+    bs = block_size
+    # bm/bn are pinned to the mask granularity; bk (the K panel depth) is
+    # the free, autotunable tile dimension — K is padded up to a multiple.
+    bk = int((tiles or {}).get("bk", _MM_DEFAULT_TILES["bk"]))
+    bk = min(bk, max(k, 1))
+    ap = _pad_to(a, bs, bk)
+    bp = _pad_to(b, bk, bs)
+    gm, gn = ap.shape[0] // bs, bp.shape[1] // bs
+    mk = out_block_mask
+    if mk.shape != (gm, gn):
+        mk = jnp.pad(mk, ((0, gm - mk.shape[0]), (0, gn - mk.shape[1])))
+    out = masked_matmul_pallas(ap, bp, mk, bm=bs, bn=bs, bk=bk,
+                               interpret=interpret)
+    return out[:m, :n]
+
+
+@registry.register("masked_matmul", registry.INTERPRET)
+def _masked_matmul_interpret(a, b, out_block_mask, *, block_size: int = 256,
+                             tiles: Tiles = None):
+    return _masked_matmul_pallas(a, b, out_block_mask, block_size=block_size,
+                                 tiles=tiles, interpret=True)
+
+
+@registry.register("masked_matmul", registry.TPU)
+def _masked_matmul_tpu(a, b, out_block_mask, *, block_size: int = 256,
+                       tiles: Tiles = None):
+    return _masked_matmul_pallas(a, b, out_block_mask, block_size=block_size,
+                                 tiles=tiles, interpret=False)
+
+
+# ---------------------------------------------------------------------------
+# merge_join — block-skip overlay join (paper §4.3/§4.7).
+# ---------------------------------------------------------------------------
+
+@registry.register("merge_join", registry.DENSE)
+def _merge_join_dense(a, b, mask_a, mask_b, *, merge: Callable,
+                      mode: int = MODE_ALL, block_size: int = 256,
+                      tiles: Tiles = None):
+    return refmod.merge_join_ref(a, b, mask_a, mask_b, merge, mode,
+                                 block_size, block_size)
+
+
+def _merge_join_pallas(a, b, mask_a, mask_b, *, merge, mode, block_size,
+                       interpret):
+    bs = block_size
+    ap, bp = _pad_to(a, bs, bs), _pad_to(b, bs, bs)
+    gm, gn = ap.shape[0] // bs, ap.shape[1] // bs
+
+    def padm(mk):
+        mk = jnp.asarray(mk)
+        return jnp.pad(mk, ((0, gm - mk.shape[0]), (0, gn - mk.shape[1])))
+
+    out = merge_join_pallas(ap, bp, padm(mask_a), padm(mask_b),
+                            merge=merge, mode=mode, bm=bs, bn=bs,
+                            interpret=interpret)
+    return out[: a.shape[0], : a.shape[1]]
+
+
+@registry.register("merge_join", registry.INTERPRET)
+def _merge_join_interpret(a, b, mask_a, mask_b, *, merge: Callable,
+                          mode: int = MODE_ALL, block_size: int = 256,
+                          tiles: Tiles = None):
+    return _merge_join_pallas(a, b, mask_a, mask_b, merge=merge, mode=mode,
+                              block_size=block_size, interpret=True)
+
+
+@registry.register("merge_join", registry.TPU)
+def _merge_join_tpu(a, b, mask_a, mask_b, *, merge: Callable,
+                    mode: int = MODE_ALL, block_size: int = 256,
+                    tiles: Tiles = None):
+    return _merge_join_pallas(a, b, mask_a, mask_b, merge=merge, mode=mode,
+                              block_size=block_size, interpret=False)
+
+
+# ---------------------------------------------------------------------------
+# bloom_probe — V2V Bloom-join membership probe (paper §4.7).
+# ---------------------------------------------------------------------------
+
+_BLOOM_TILE_GRID = ({"bs": 1024}, {"bs": 2048}, {"bs": 4096}, {"bs": 8192})
+_BLOOM_DEFAULT_TILES = {"bs": 4096}
+
+
+@registry.register("bloom_probe", registry.DENSE,
+                   tile_grid=_BLOOM_TILE_GRID,
+                   default_tiles=_BLOOM_DEFAULT_TILES)
+def _bloom_probe_dense(words, vals, *, num_hashes: int = 3,
+                       log2_bits: int = 20, tiles: Tiles = None):
+    return refmod.bloom_probe_ref(words, vals, num_hashes, log2_bits)
+
+
+def _bloom_probe_pallas(words, vals, *, num_hashes, log2_bits, tiles,
+                        interpret):
+    n = vals.shape[0]
+    bs = int((tiles or {}).get("bs", _BLOOM_DEFAULT_TILES["bs"]))
+    pad = (-n) % bs
+    vp = jnp.pad(vals, (0, pad), constant_values=np.nan)  # NaN never matches
+    out = bloom_probe_pallas(words, vp, num_hashes=num_hashes,
+                             log2_bits=log2_bits, bs=bs, interpret=interpret)
+    return out[:n]
+
+
+@registry.register("bloom_probe", registry.INTERPRET)
+def _bloom_probe_interpret(words, vals, *, num_hashes: int = 3,
+                           log2_bits: int = 20, tiles: Tiles = None):
+    return _bloom_probe_pallas(words, vals, num_hashes=num_hashes,
+                               log2_bits=log2_bits, tiles=tiles,
+                               interpret=True)
+
+
+@registry.register("bloom_probe", registry.TPU)
+def _bloom_probe_tpu(words, vals, *, num_hashes: int = 3,
+                     log2_bits: int = 20, tiles: Tiles = None):
+    return _bloom_probe_pallas(words, vals, num_hashes=num_hashes,
+                               log2_bits=log2_bits, tiles=tiles,
+                               interpret=False)
+
+
+# ---------------------------------------------------------------------------
+# Public wrappers (historical API; ``force`` maps onto registry backends).
+# ---------------------------------------------------------------------------
+
 def masked_matmul(a: jnp.ndarray, b: jnp.ndarray, out_block_mask: jnp.ndarray,
-                  *, block_size: int = 256, force: Optional[str] = None
-                  ) -> jnp.ndarray:
+                  *, block_size: int = 256, force: Optional[str] = None,
+                  tiles: Tiles = None) -> jnp.ndarray:
     """(A×B) with whole output blocks gated by ``out_block_mask``.
 
     ``out_block_mask`` is [ceil(M/bs), ceil(N/bs)] bool over the OUTPUT tile
     grid — the paper's "compute only the W×H blocks under nonzero A blocks".
     """
-    m, k = a.shape
-    _, n = b.shape
-    bs = block_size
-    use_pallas = force == "pallas" or (force is None and _on_tpu())
-    if not use_pallas:
-        return refmod.masked_matmul_ref(a, b, out_block_mask, bs, bs)
-    ap = _pad_to(a, bs, bs)
-    bp = _pad_to(b, bs, bs)
-    gm, gn = ap.shape[0] // bs, bp.shape[1] // bs
-    mk = out_block_mask
-    if mk.shape != (gm, gn):
-        mk = jnp.pad(mk, ((0, gm - mk.shape[0]), (0, gn - mk.shape[1])))
-    out = masked_matmul_pallas(ap, bp, mk, bm=bs, bn=bs,
-                               bk=min(bs, ap.shape[1]),
-                               interpret=not _on_tpu())
-    return out[:m, :n]
+    return registry.dispatch("masked_matmul", a, b, out_block_mask,
+                             backend=_force_to_backend(force),
+                             block_size=block_size, tiles=tiles)
 
 
 def merge_join(a: jnp.ndarray, b: jnp.ndarray, mask_a: jnp.ndarray,
                mask_b: jnp.ndarray, merge: Callable, mode: int = MODE_ALL,
-               *, block_size: int = 256, force: Optional[str] = None
-               ) -> jnp.ndarray:
-    bs = block_size
-    use_pallas = force == "pallas" or (force is None and _on_tpu())
-    if not use_pallas:
-        return refmod.merge_join_ref(a, b, mask_a, mask_b, merge, mode,
-                                     bs, bs)
-    ap, bp = _pad_to(a, bs, bs), _pad_to(b, bs, bs)
-    gm, gn = ap.shape[0] // bs, ap.shape[1] // bs
-
-    def padm(mk):
-        return jnp.pad(mk, ((0, gm - mk.shape[0]), (0, gn - mk.shape[1])))
-
-    out = merge_join_pallas(ap, bp, padm(mask_a), padm(mask_b),
-                            merge=merge, mode=mode, bm=bs, bn=bs,
-                            interpret=not _on_tpu())
-    return out[: a.shape[0], : a.shape[1]]
+               *, block_size: int = 256, force: Optional[str] = None,
+               tiles: Tiles = None) -> jnp.ndarray:
+    return registry.dispatch("merge_join", a, b, mask_a, mask_b,
+                             backend=_force_to_backend(force),
+                             merge=merge, mode=mode, block_size=block_size,
+                             tiles=tiles)
 
 
 def bloom_probe(words: jnp.ndarray, vals: jnp.ndarray, *,
                 num_hashes: int = 3, log2_bits: int = 20,
-                force: Optional[str] = None) -> jnp.ndarray:
-    use_pallas = force == "pallas" or (force is None and _on_tpu())
-    if not use_pallas:
-        return refmod.bloom_probe_ref(words, vals, num_hashes, log2_bits)
-    n = vals.shape[0]
-    bs = 4096
-    pad = (-n) % bs
-    vp = jnp.pad(vals, (0, pad), constant_values=np.nan)  # NaN never matches
-    out = bloom_probe_pallas(words, vp, num_hashes=num_hashes,
-                             log2_bits=log2_bits, bs=bs,
-                             interpret=not _on_tpu())
-    return out[:n]
+                force: Optional[str] = None,
+                tiles: Tiles = None) -> jnp.ndarray:
+    return registry.dispatch("bloom_probe", words, vals,
+                             backend=_force_to_backend(force),
+                             num_hashes=num_hashes, log2_bits=log2_bits,
+                             tiles=tiles)

@@ -1,0 +1,198 @@
+"""Kernel backend registry: logical kernel names → per-backend physical impls.
+
+The paper pushes relational operators down to hardware kernels (masked
+matmul for select/agg pipelines, merge-function overlay joins, Bloom
+probes). Callers above this layer (``core.executor``, ``core.joins``, the
+benchmarks) name the *logical* kernel; the registry picks the *physical*
+implementation at call time from runtime capability detection:
+
+* ``dense``            — pure-jnp oracle (``ref.py``); always available, and
+                         the correctness reference every backend is tested
+                         against.
+* ``pallas-interpret`` — the Pallas kernel body run by the interpreter;
+                         available wherever ``jax.experimental.pallas``
+                         imports (CPU CI included).
+* ``pallas-tpu``       — the compiled Mosaic kernel; available when the
+                         default JAX backend is TPU.
+
+Selection order: explicit ``backend=`` argument > ``REPRO_KERNEL_BACKEND``
+env var > ``pallas-tpu`` when on TPU > ``dense``. Interpret mode is opt-in
+(it validates kernel bodies; it is never the fastest CPU path).
+
+Registering a new kernel:
+
+    from repro.kernels import registry
+
+    @registry.register("my_kernel", registry.DENSE)
+    def _my_kernel_dense(x, *, tiles=None): ...
+
+    @registry.register("my_kernel", registry.INTERPRET,
+                       tile_grid=({"bm": 64}, {"bm": 128}),
+                       default_tiles={"bm": 128})
+    def _my_kernel_interp(x, *, tiles=None): ...
+
+Every impl of one logical kernel must share a signature and accept a
+``tiles`` kwarg (a dict of block sizes, or None for defaults) so the
+autotuner (``repro.kernels.autotune``) can drive any backend uniformly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+
+from repro.kernels import compat
+
+DENSE = "dense"
+INTERPRET = "pallas-interpret"
+TPU = "pallas-tpu"
+BACKENDS = (DENSE, INTERPRET, TPU)
+
+_BACKEND_ENV = "REPRO_KERNEL_BACKEND"
+_AUTOTUNE_ENV = "REPRO_AUTOTUNE"
+
+
+@dataclasses.dataclass
+class KernelSpec:
+    """One logical kernel: its per-backend impls and autotune metadata."""
+    name: str
+    impls: Dict[str, Callable] = dataclasses.field(default_factory=dict)
+    tile_grid: Tuple[Dict[str, int], ...] = ()
+    default_tiles: Optional[Dict[str, int]] = None
+
+    def backends(self) -> Tuple[str, ...]:
+        return tuple(b for b in BACKENDS if b in self.impls)
+
+
+_REGISTRY: Dict[str, KernelSpec] = {}
+_BUILTINS_LOADED = False
+
+
+def _ensure_builtins() -> None:
+    """Importing ``repro.kernels.ops`` registers the built-in kernels."""
+    global _BUILTINS_LOADED
+    if not _BUILTINS_LOADED:
+        import repro.kernels.ops  # noqa: F401  (side effect: registration)
+        # only after success: a failed import is removed from sys.modules,
+        # so the next call retries (and re-raises the real error) instead
+        # of reporting a misleading empty registry
+        _BUILTINS_LOADED = True
+
+
+def register(name: str, backend: str, *,
+             tile_grid: Tuple[Dict[str, int], ...] = (),
+             default_tiles: Optional[Dict[str, int]] = None):
+    """Decorator: register ``fn`` as the ``backend`` impl of kernel ``name``.
+
+    ``tile_grid``/``default_tiles`` attach autotune metadata to the spec;
+    the first registration to provide them wins (they describe the kernel,
+    not the backend).
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
+
+    def deco(fn: Callable) -> Callable:
+        spec = _REGISTRY.setdefault(name, KernelSpec(name=name))
+        spec.impls[backend] = fn
+        if tile_grid and not spec.tile_grid:
+            spec.tile_grid = tuple(dict(t) for t in tile_grid)
+        if default_tiles and not spec.default_tiles:
+            spec.default_tiles = dict(default_tiles)
+        return fn
+
+    return deco
+
+
+def get(name: str) -> KernelSpec:
+    _ensure_builtins()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"no kernel {name!r} registered; have {sorted(_REGISTRY)}"
+        ) from None
+
+
+def kernels() -> Tuple[str, ...]:
+    _ensure_builtins()
+    return tuple(sorted(_REGISTRY))
+
+
+def available_backends() -> Tuple[str, ...]:
+    """Backends runnable on THIS process, by runtime capability detection."""
+    out = [DENSE]
+    if compat.has_pallas():
+        out.append(INTERPRET)
+        if jax.default_backend() == "tpu":
+            out.append(TPU)
+    return tuple(out)
+
+
+def resolve_backend(name: str, backend: Optional[str] = None) -> str:
+    """Pick the physical backend for one dispatch of kernel ``name``."""
+    spec = get(name)
+    avail = available_backends()
+    choice = backend or os.environ.get(_BACKEND_ENV) or None
+    if choice is not None:
+        if choice not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {choice!r}; expected one of {BACKENDS}")
+        if choice not in avail:
+            raise RuntimeError(
+                f"backend {choice!r} unavailable here (have {avail})")
+        if choice not in spec.impls:
+            raise KeyError(
+                f"kernel {name!r} has no {choice!r} impl "
+                f"(has {spec.backends()})")
+        return choice
+    if TPU in avail and TPU in spec.impls:
+        return TPU
+    if DENSE not in spec.impls:
+        raise KeyError(
+            f"kernel {name!r} has no {DENSE!r} impl (has {spec.backends()});"
+            " every kernel must register a dense oracle")
+    return DENSE
+
+
+def dispatch(name: str, *args: Any, backend: Optional[str] = None,
+             tiles: Optional[Dict[str, int]] = None, **kw: Any):
+    """Run kernel ``name`` on the resolved backend.
+
+    When ``tiles`` is None and ``REPRO_AUTOTUNE`` is set, previously-tuned
+    tile sizes are looked up from the autotune cache (cache-only — dispatch
+    never times; populating the cache is ``autotune.best_tiles``'s job).
+    """
+    spec = get(name)
+    chosen = resolve_backend(name, backend)
+    if tiles is None and _autotune_enabled():
+        from repro.kernels import autotune
+        tiles = autotune.cached_tiles(
+            name, _arg_shapes(args), _arg_dtype(args), chosen)
+    return spec.impls[chosen](*args, tiles=tiles, **kw)
+
+
+def _autotune_enabled() -> bool:
+    val = os.environ.get(_AUTOTUNE_ENV, "")
+    return val.lower() not in ("", "0", "false", "no", "off")
+
+
+def _arg_shapes(args: Tuple[Any, ...]) -> Tuple[Tuple[int, ...], ...]:
+    return tuple(tuple(a.shape) for a in args if hasattr(a, "shape"))
+
+
+def _arg_dtype(args: Tuple[Any, ...]) -> str:
+    # key by the first floating payload dtype, not auxiliary integer args
+    # (bloom_probe's leading words arg is uint32; its values are float)
+    import jax.numpy as jnp
+    first = None
+    for a in args:
+        dt = getattr(a, "dtype", None)
+        if dt is None:
+            continue
+        if first is None:
+            first = str(dt)
+        if jnp.issubdtype(dt, jnp.floating):
+            return str(dt)
+    return first or "float32"

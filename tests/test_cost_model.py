@@ -2,6 +2,8 @@
 import itertools
 
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import cost as C

@@ -1,0 +1,248 @@
+"""Kernel backend registry: capability detection, backend parity
+(dense oracle ≡ pallas-interpret) across all kernels × dtypes ×
+non-square/unaligned shapes, and the block-size autotuner cache."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bloom import BloomParams, build
+from repro.kernels import autotune, registry
+from repro.kernels.merge_join import MODE_ALL, MODE_BOTH, MODE_X, MODE_Y
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+# deliberately non-square and not multiples of the block size (pad paths)
+SHAPES_MM = [(48, 40, 56, 16), (100, 36, 68, 32), (33, 17, 65, 16)]
+SHAPES_MJ = [(48, 56, 16), (100, 68, 32), (33, 65, 16)]
+
+
+@pytest.fixture(autouse=True)
+def _isolated_autotune_cache(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE",
+                       str(tmp_path / "autotune.json"))
+    autotune.clear_cache()
+    yield
+    autotune.clear_cache()
+
+
+# ---------------------------------------------------------------------------
+# Registry surface.
+# ---------------------------------------------------------------------------
+
+def test_builtin_kernels_registered():
+    assert set(registry.kernels()) >= {"masked_matmul", "merge_join",
+                                       "bloom_probe"}
+    for name in ("masked_matmul", "merge_join", "bloom_probe"):
+        spec = registry.get(name)
+        assert set(spec.backends()) == {registry.DENSE, registry.INTERPRET,
+                                        registry.TPU}
+
+
+def test_capability_detection_cpu():
+    avail = registry.available_backends()
+    assert registry.DENSE in avail
+    assert registry.INTERPRET in avail  # pallas imports in this container
+    # default resolution on CPU is the dense oracle, never interpret
+    assert registry.resolve_backend("masked_matmul") in (registry.DENSE,
+                                                         registry.TPU)
+
+
+def test_env_var_backend_override(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", registry.INTERPRET)
+    assert registry.resolve_backend("merge_join") == registry.INTERPRET
+
+
+def test_unknown_backend_rejected():
+    with pytest.raises(ValueError):
+        registry.resolve_backend("masked_matmul", "cuda-graphs")
+    with pytest.raises(KeyError):
+        registry.get("nonexistent_kernel")
+
+
+# ---------------------------------------------------------------------------
+# Parity sweep: dense oracle ≡ pallas-interpret, via the registry.
+# ---------------------------------------------------------------------------
+
+def _tol(dtype):
+    return dict(atol=1e-4 if dtype == jnp.float32 else 6e-2, rtol=1e-2)
+
+
+@pytest.mark.parametrize("m,k,n,bs", SHAPES_MM)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_parity_masked_matmul(rng, m, k, n, bs, dtype):
+    a = jnp.asarray(rng.normal(size=(m, k)), dtype)
+    b = jnp.asarray(rng.normal(size=(k, n)), dtype)
+    gm, gn = -(-m // bs), -(-n // bs)
+    mask = jnp.asarray(rng.uniform(size=(gm, gn)) < 0.5)
+    dense = registry.dispatch("masked_matmul", a, b, mask,
+                              backend=registry.DENSE, block_size=bs)
+    interp = registry.dispatch("masked_matmul", a, b, mask,
+                               backend=registry.INTERPRET, block_size=bs)
+    assert interp.shape == dense.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(interp, np.float32),
+                               np.asarray(dense, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("m,n,bs", SHAPES_MJ)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("mode", [MODE_BOTH, MODE_X, MODE_Y, MODE_ALL])
+def test_parity_merge_join(rng, m, n, bs, dtype, mode):
+    a = jnp.asarray(rng.normal(size=(m, n)), dtype)
+    b = jnp.asarray(rng.normal(size=(m, n)), dtype)
+    gm, gn = -(-m // bs), -(-n // bs)
+    ma = jnp.asarray(rng.uniform(size=(gm, gn)) < 0.5)
+    mb = jnp.asarray(rng.uniform(size=(gm, gn)) < 0.5)
+    f = lambda x, y: x * y + 0.5 * y
+    dense = registry.dispatch("merge_join", a, b, ma, mb,
+                              backend=registry.DENSE, merge=f, mode=mode,
+                              block_size=bs)
+    interp = registry.dispatch("merge_join", a, b, ma, mb,
+                               backend=registry.INTERPRET, merge=f,
+                               mode=mode, block_size=bs)
+    np.testing.assert_allclose(np.asarray(interp, np.float32),
+                               np.asarray(dense, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("n,log2_bits", [(1000, 12), (5000, 14)])
+def test_parity_bloom_probe(rng, n, log2_bits):
+    vals = jnp.asarray(np.round(rng.normal(size=n), 1).astype(np.float32))
+    params = BloomParams(log2_bits=log2_bits, num_hashes=3)
+    words = build(vals[: n // 2], params)
+    dense = registry.dispatch("bloom_probe", words, vals,
+                              backend=registry.DENSE, num_hashes=3,
+                              log2_bits=log2_bits)
+    interp = registry.dispatch("bloom_probe", words, vals,
+                               backend=registry.INTERPRET, num_hashes=3,
+                               log2_bits=log2_bits)
+    assert np.array_equal(np.asarray(dense), np.asarray(interp))
+    members = np.asarray(vals[: n // 2])
+    assert np.asarray(interp)[: n // 2][members != 0].all()
+
+
+def test_parity_via_executor_pinned_backend(rng):
+    """The executor's masked-matmul pattern gives identical results with the
+    kernel backend pinned to interpret vs the dense default."""
+    from repro.core import Session
+    from repro.core.executor import Executor
+    from tests.conftest import sparse
+    a = sparse(rng, 48, 48, 0.05)
+    w = rng.normal(size=(48, 8)).astype(np.float32)
+    h = rng.normal(size=(8, 48)).astype(np.float32)
+    s = Session(block_size=16)
+    A, W, H = s.load(a), s.load(w), s.load(h)
+    plan = A.emul(W.multiply(H)).plan
+    outs = {}
+    for backend in (registry.DENSE, registry.INTERPRET):
+        ex = Executor(s.env, mode="sparse", block_size=16,
+                      kernel_backend=backend)
+        outs[backend] = np.asarray(ex.run(plan).value)
+        assert ex.stats["masked_matmuls"] == 1
+    np.testing.assert_allclose(outs[registry.DENSE],
+                               outs[registry.INTERPRET], atol=1e-4)
+
+
+def test_executor_backend_pin_reaches_join_kernels(rng):
+    """The kernel_backend pin must flow through join_sparse into the
+    overlay merge_join and V2V bloom_probe dispatches, not just the
+    executor's own masked-matmul site."""
+    from repro.core import Session
+    from repro.core.executor import Executor
+    from tests.conftest import sparse
+    a = sparse(rng, 64, 64, 0.05, round_vals=True)
+    b = sparse(rng, 64, 64, 0.05, round_vals=True)
+    a[:16, :16] = 0  # force a dead block: the overlay must take the
+    b[:16, :16] = 0  # partial-mask merge_join dispatch, not the all-live
+    s = Session(block_size=16)  # plain-merge shortcut
+    A, B = s.load(a, "A"), s.load(b, "B")
+    plans = {
+        "overlay": A.join(B, "RID=RID AND CID=CID",
+                          lambda x, y: x * y).plan,
+        "v2v": A.join(B, "VAL=VAL", lambda x, y: x + y).plan,
+    }
+    for tag, plan in plans.items():
+        outs = []
+        for backend in (registry.DENSE, registry.INTERPRET):
+            ex = Executor(s.env, mode="sparse", block_size=16,
+                          kernel_backend=backend)
+            r = ex.run(plan)
+            outs.append(np.asarray(r.value if hasattr(r, "value")
+                                   else r.to_dense()))
+        np.testing.assert_allclose(outs[0], outs[1], atol=1e-5, err_msg=tag)
+
+
+# ---------------------------------------------------------------------------
+# Autotuner.
+# ---------------------------------------------------------------------------
+
+def test_autotune_second_lookup_is_cache_hit():
+    calls = []
+
+    def runner(tiles):
+        calls.append(dict(tiles))
+        return None
+
+    args = ("masked_matmul", [(64, 32), (32, 64)], "float32",
+            registry.INTERPRET)
+    first = autotune.best_tiles(*args, runner=runner)
+    assert first in [dict(t) for t in registry.get(
+        "masked_matmul").tile_grid]
+    n_timed = len(calls)
+    assert n_timed > 0
+    second = autotune.best_tiles(*args, runner=runner)
+    assert second == first
+    assert len(calls) == n_timed  # no re-timing on the second lookup
+
+
+def test_autotune_shape_bucketing_shares_entries():
+    key_a = autotune.cache_key("k", [(65, 100)], "float32", "dense")
+    key_b = autotune.cache_key("k", [(128, 128)], "float32", "dense")
+    assert key_a == key_b  # both bucket to (128, 128)
+    assert autotune.cache_key("k", [(64, 64)], "float32", "dense") != key_a
+
+
+def test_autotune_graceful_fallback_without_timing():
+    # no runner at all → kernel defaults, nothing cached
+    tiles = autotune.best_tiles("masked_matmul", [(64, 64)], "float32",
+                                registry.DENSE)
+    assert tiles == registry.get("masked_matmul").default_tiles
+    assert autotune.cached_tiles("masked_matmul", [(64, 64)], "float32",
+                                 registry.DENSE) is None
+
+    # every candidate fails to time → defaults, still nothing cached
+    def broken(tiles):
+        raise RuntimeError("no timer on this host")
+
+    tiles = autotune.best_tiles("bloom_probe", [(128,)], "float32",
+                                registry.DENSE, runner=broken)
+    assert tiles == registry.get("bloom_probe").default_tiles
+    assert autotune.cached_tiles("bloom_probe", [(128,)], "float32",
+                                 registry.DENSE) is None
+
+
+def test_autotune_disk_round_trip():
+    best = autotune.best_tiles("bloom_probe", [(4096,)], "float32",
+                               registry.INTERPRET, runner=lambda t: None)
+    path = autotune.save_cache()
+    autotune.clear_cache()  # drop the in-process cache; disk survives
+    hit = autotune.cached_tiles("bloom_probe", [(4096,)], "float32",
+                                registry.INTERPRET)
+    assert hit == best, path
+
+
+def test_autotuned_dispatch_reads_cache(rng, monkeypatch):
+    """REPRO_AUTOTUNE=1 makes dispatch consult the cache (and still give
+    bit-identical results — tiles change scheduling, not math)."""
+    vals = jnp.asarray(np.round(rng.normal(size=600), 1).astype(np.float32))
+    params = BloomParams(log2_bits=12, num_hashes=2)
+    words = build(vals, params)
+    base = registry.dispatch("bloom_probe", words, vals,
+                             backend=registry.INTERPRET, num_hashes=2,
+                             log2_bits=12)
+    key = autotune.cache_key("bloom_probe",
+                             [tuple(words.shape), tuple(vals.shape)],
+                             str(vals.dtype), registry.INTERPRET)
+    autotune._CACHE[key] = {"bs": 256}
+    monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+    tuned = registry.dispatch("bloom_probe", words, vals,
+                              backend=registry.INTERPRET, num_hashes=2,
+                              log2_bits=12)
+    assert np.array_equal(np.asarray(base), np.asarray(tuned))

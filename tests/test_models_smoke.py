@@ -48,9 +48,12 @@ def test_forward_shapes_no_nans(arch):
     assert not bool(jnp.isnan(aux))
 
 
-@pytest.mark.parametrize("arch", ["qwen3-1.7b", "granite-moe-1b-a400m",
-                                  "jamba-v0.1-52b", "rwkv6-7b",
-                                  "whisper-small"])
+@pytest.mark.parametrize("arch", [
+    "qwen3-1.7b", "granite-moe-1b-a400m",
+    # jamba's hybrid train step is ~50s of XLA compile on CPU; its coverage
+    # stays in tier-1 via forward-shapes + decode-equivalence
+    pytest.param("jamba-v0.1-52b", marks=pytest.mark.slow),
+    "rwkv6-7b", "whisper-small"])
 def test_train_step_no_nans(arch):
     cfg = reduced(get_config(arch))
     params = init_params(jax.random.key(0), mapi.spec(cfg))

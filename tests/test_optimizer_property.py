@@ -7,6 +7,8 @@ For RANDOM plans over random matrices:
 """
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.core import Session
