@@ -1,0 +1,42 @@
+"""Physical planner benchmark: CSE speedup + plan-build overhead.
+
+Workload: ``G = XᵀX`` used three times in one query (``(G+G)+G``) — the
+repeated-subexpression shape the paper's factorized-evaluation related work
+optimizes. The naive tree-walk executor recomputes the Gram matrix at every
+occurrence; the planned DAG hash-conses it into one node and computes it
+once. Also reports the pure plan-build cost (no execution) so the planning
+overhead stays visible as plans grow.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro import plan as planmod
+from repro.core import Session
+
+
+def run(rng) -> None:
+    for n in (256, 384):
+        x = rng.normal(size=(n, n)).astype(np.float32)
+        s = Session(block_size=128)
+        X = s.load(x, "X")
+        g = X.t().multiply(X)
+        q = g.add(g).add(g)            # (XᵀX) shared across three uses
+
+        opt = q.optimized_plan().plan
+        pplan = s.physical_plan(opt)
+
+        # median over 7: single-core CI boxes are noisy and this row gates
+        # the committed BENCH_plan.json speedup claim
+        tree_us = timeit(lambda: q.collect(engine="tree").value, repeats=7)
+        dag_us = timeit(lambda: q.collect(engine="dag").value, repeats=7)
+        build_us = timeit(lambda: planmod.build_plan(
+            opt, mode=s.mode, block_size=s.block_size), repeats=5)
+
+        row(f"plan_cse_n{n}_tree_walk", tree_us, "3x XtX recomputed")
+        row(f"plan_cse_n{n}_planned_dag", dag_us,
+            f"speedup={tree_us / max(dag_us, 1e-9):.2f}x")
+        row(f"plan_cse_n{n}_plan_build", build_us,
+            f"nodes={pplan.n_nodes}/{pplan.logical_nodes} "
+            f"shared={pplan.shared_nodes}")

@@ -8,26 +8,76 @@ Prints ``name,us_per_call,derived`` CSV rows. Mapping to the paper:
     bench_join_single   — Fig. 11a–c  (D2D joins + cost-model validation)
     bench_join_entries  — Fig. 11d    (V2V Bloom vs sparsity)
     bench_pnmf          — Table 6     (PNMF pipeline)
+    bench_plan_cse      — (beyond paper) planned DAG vs tree-walk CSE
     bench_roofline      — (beyond paper) dry-run roofline table
+
+Usage: ``python benchmarks/run.py [substring] [--json | --json=path]``
+
+``substring`` filters modules by name; ``--json`` additionally writes the
+rows as machine-readable records to ``results/bench.json`` (or the
+``--json=path`` override — ``=`` form only, so a following substring
+filter can never be mistaken for the output path).
 """
+import json
+import os
 import sys
 import time
 
 import numpy as np
 
+DEFAULT_JSON = os.path.join("results", "bench.json")
+
+
+def _parse_args(argv):
+    only, json_path = None, None
+    for a in argv:
+        if a == "--json":
+            json_path = DEFAULT_JSON
+        elif a.startswith("--json="):
+            json_path = a.split("=", 1)[1] or DEFAULT_JSON
+        elif a.startswith("-"):
+            raise SystemExit(f"unknown flag {a!r}; "
+                             "usage: run.py [substring] [--json[=path]]")
+        else:
+            only = a
+    return only, json_path
+
+
+def _write_json(path: str, rows, only, wall_s: float) -> None:
+    records = []
+    for line in rows:
+        name, us, derived = line.split(",", 2)
+        records.append({
+            "name": name,
+            "us_per_call": None if us == "skipped" else float(us),
+            "derived": derived,
+        })
+    out = {
+        "schema": 1,
+        "created_unix": time.time(),
+        "filter": only,
+        "wall_s": wall_s,
+        "rows": records,
+    }
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {path} ({len(records)} rows)", flush=True)
+
 
 def main() -> None:
     from benchmarks import (
         bench_agg_gram, bench_cross_product, bench_join_dims,
-        bench_join_entries, bench_join_single, bench_pnmf, bench_roofline,
-        bench_select_lr,
+        bench_join_entries, bench_join_single, bench_plan_cse, bench_pnmf,
+        bench_roofline, bench_select_lr,
     )
-    from benchmarks.common import row
+    from benchmarks.common import ROWS, row
 
     mods = [bench_agg_gram, bench_select_lr, bench_cross_product,
             bench_join_dims, bench_join_single, bench_join_entries,
-            bench_pnmf, bench_roofline]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+            bench_pnmf, bench_plan_cse, bench_roofline]
+    only, json_path = _parse_args(sys.argv[1:])
     print("name,us_per_call,derived")
     t0 = time.time()
     for mod in mods:
@@ -38,7 +88,10 @@ def main() -> None:
         mod.run(rng)
         row(f"_{mod.__name__.split('.')[-1]}_wall", (time.time() - t) * 1e6,
             "")
-    row("_total_wall", (time.time() - t0) * 1e6, "")
+    wall_s = time.time() - t0
+    row("_total_wall", wall_s * 1e6, "")
+    if json_path is not None:
+        _write_json(json_path, ROWS, only, wall_s)
 
 
 if __name__ == '__main__':

@@ -7,8 +7,13 @@
     C = A.join(B, "RID=RID AND CID=CID", f)            # Code 4
     C = A.join(B, "VAL=VAL", f)                        # Code 5
 
-``collect()`` runs the rule-based optimizer then the sparsity-aware executor;
-``collect(optimize=False)`` is the naive plan (the paper's MatRel(w/o-opt)).
+``collect()`` runs the rule-based optimizer, lowers the result into a
+hash-consed physical operator DAG (``repro.plan``) and executes it —
+shared subexpressions are computed once and every strategy decision (join
+algorithm, kernel backend, partition schemes) is made at plan time.
+``collect(optimize=False)`` skips the logical rewrites (the paper's
+MatRel(w/o-opt)); ``collect(engine="tree")`` runs the legacy recursive
+tree-walk executor, kept as the correctness oracle.
 """
 from __future__ import annotations
 
@@ -20,6 +25,7 @@ import numpy as np
 
 from repro.core import executor as exmod
 from repro.core import optimizer as optmod
+from repro import plan as planmod
 from repro.core.expr import (
     Agg, AggDim, AggFn, ElemWise, EWOp, Expr, Inverse, Join, Leaf, MatMul,
     MatScalar, MergeFn, Select, Transpose,
@@ -29,15 +35,27 @@ from repro.core.predicates import parse_join, parse_select
 
 
 class Session:
-    """Holds named base matrices (the catalog) and execution settings."""
+    """Holds named base matrices (the catalog) and execution settings.
+
+    ``engine`` selects the default ``collect()`` path: ``"dag"`` (the
+    physical planner, default) or ``"tree"`` (the legacy recursive
+    executor, kept as the oracle the planner is tested against).
+    """
 
     def __init__(self, block_size: int = 256, mode: str = "sparse",
-                 use_bloom: bool = True):
+                 use_bloom: bool = True, engine: str = "dag",
+                 n_workers: Optional[int] = None):
+        if engine not in ("dag", "tree"):
+            raise ValueError(f"unknown engine {engine!r}")
         self.env: Dict[str, BlockMatrix] = {}
         self.block_size = block_size
         self.mode = mode
         self.use_bloom = use_bloom
+        self.engine = engine
+        self.n_workers = n_workers
         self._auto = 0
+        self._plan_cache: Dict[tuple, "planmod.PhysicalPlan"] = {}
+        self._opt_cache: Dict[Expr, Expr] = {}
 
     def load(self, value, name: Optional[str] = None,
              sparsity: Optional[float] = None) -> "Matrix":
@@ -52,13 +70,58 @@ class Session:
             sparsity = float(np.asarray(bm.nnz())) / max(1, bm.value.size)
         return Matrix(self, Leaf(name, bm.shape, sparsity))
 
-    def execute(self, plan: Expr, optimize: bool = True):
+    def execute(self, plan: Expr, optimize: bool = True,
+                engine: Optional[str] = None):
         if optimize:
-            res = optmod.optimize(plan)
-            plan = res.plan
-        return exmod.execute(plan, self.env, mode=self.mode,
-                             block_size=self.block_size,
-                             use_bloom=self.use_bloom)
+            plan = self._optimized(plan)
+        engine = engine or self.engine
+        if engine not in ("dag", "tree"):
+            raise ValueError(f"unknown engine {engine!r}")
+        if engine == "tree":
+            return exmod.execute(plan, self.env, mode=self.mode,
+                                 block_size=self.block_size,
+                                 use_bloom=self.use_bloom)
+        return planmod.execute_plan(self.physical_plan(plan), self.env)
+
+    def _optimized(self, plan: Expr) -> Expr:
+        """Logical optimization with a bounded per-session memo, so the
+        hot repeated-``collect()`` path skips the rewrite fixpoint too."""
+        hit = self._opt_cache.get(plan)
+        if hit is None:
+            hit = optmod.optimize(plan).plan
+            while len(self._opt_cache) >= _PLAN_CACHE_LIMIT:
+                self._opt_cache.pop(next(iter(self._opt_cache)))
+            self._opt_cache[plan] = hit
+        return hit
+
+    def physical_plan(self, plan: Expr) -> "planmod.PhysicalPlan":
+        """Lower ``plan`` (assumed already optimized) into a physical DAG.
+
+        Plans are cached per (expr, mode, block_size, use_bloom,
+        n_workers, kernel backend env): logical ``Expr`` trees are frozen
+        and hash structurally, and plan annotations derive from the
+        expression plus those settings — so repeated ``collect()`` calls
+        reuse the DAG (and its staged jit function). The cache is bounded:
+        sessions issuing parameter-varying queries evict oldest-first.
+        """
+        import os
+        key = (plan, self.mode, self.block_size, self.use_bloom,
+               self.n_workers, os.environ.get("REPRO_KERNEL_BACKEND"))
+        cached = self._plan_cache.get(key)
+        if cached is None:
+            cached = planmod.build_plan(
+                plan, mode=self.mode, block_size=self.block_size,
+                use_bloom=self.use_bloom, n_workers=self.n_workers)
+            while len(self._plan_cache) >= _PLAN_CACHE_LIMIT:
+                self._plan_cache.pop(next(iter(self._plan_cache)))
+            self._plan_cache[key] = cached
+        return cached
+
+
+# Bounds the per-session physical-plan cache (each dense-tier entry can pin
+# a compiled jit executable, so unbounded growth would leak memory on
+# sessions issuing dynamically generated queries).
+_PLAN_CACHE_LIMIT = 128
 
 
 def _merge_of(f: Union[MergeFn, Callable], name: str = "f") -> MergeFn:
@@ -137,17 +200,20 @@ class Matrix:
     def optimized_plan(self) -> optmod.OptimizeResult:
         return optmod.optimize(self.plan)
 
-    def explain(self) -> str:
-        res = self.optimized_plan()
-        return (f"== original (cost {res.original_cost:.4g}) ==\n"
-                f"{self.plan.pretty()}\n"
-                f"== optimized (cost {res.optimized_cost:.4g}, "
-                f"est speedup {res.speedup_estimate:.2f}x) ==\n"
-                f"{res.plan.pretty()}\n"
-                f"fired: {', '.join(res.fired) or '(none)'}")
+    def physical_plan(self, optimize: bool = True) -> planmod.PhysicalPlan:
+        plan = self.optimized_plan().plan if optimize else self.plan
+        return self.session.physical_plan(plan)
 
-    def collect(self, optimize: bool = True):
-        return self.session.execute(self.plan, optimize=optimize)
+    def explain(self, physical: bool = False) -> str:
+        """Logical EXPLAIN (rewrites + costs) or, with ``physical=True``,
+        the physical DAG with per-node cost, strategy, backend, sharding."""
+        if physical:
+            return planmod.render(self.physical_plan())
+        return self.optimized_plan().describe(self.plan)
+
+    def collect(self, optimize: bool = True, engine: Optional[str] = None):
+        return self.session.execute(self.plan, optimize=optimize,
+                                    engine=engine)
 
     def to_numpy(self, optimize: bool = True) -> np.ndarray:
         out = self.collect(optimize=optimize)

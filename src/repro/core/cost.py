@@ -98,6 +98,51 @@ def plan_memory(e: Expr) -> float:
 
 
 # ---------------------------------------------------------------------------
+# Entry-join strategy gate (paper §4.5/§4.7): Bloom-filtered vs. plain
+# sort-merge. Chosen at plan time from the nnz estimates.
+# ---------------------------------------------------------------------------
+
+# Below this many entries on either side the Bloom build/probe overhead
+# exceeds the sorting work it can save.
+V2V_BLOOM_MIN_ENTRIES = 256
+
+BLOOM_SORTMERGE = "bloom-sortmerge"
+SORTMERGE = "sortmerge"
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinStrategyChoice:
+    strategy: str
+    cost_sortmerge: float
+    cost_bloom: float
+
+
+def choose_v2v_strategy(nnz_a: float, nnz_b: float,
+                        match_frac: float = 0.1,
+                        use_bloom: bool = True) -> JoinStrategyChoice:
+    """Cost-gate the Bloom pre-filter for entry joins.
+
+    Plain sort-merge sorts both entry sets; the Bloom variant first builds
+    a filter over B's values and probes A's entries, so only the expected
+    ``match_frac`` survivors of A enter the sort. The filter pays off when
+    the avoided ``n_a log n_a`` sorting work exceeds the linear build +
+    probe cost — i.e. for large, selective entry joins (the paper's Fig.
+    11d regime). Tiny inputs always take plain sort-merge.
+    """
+    import math
+    na, nb = max(float(nnz_a), 1.0), max(float(nnz_b), 1.0)
+    survivors = max(na * match_frac, 1.0)
+    c_merge = na * math.log2(na + 1) + nb * math.log2(nb + 1)
+    c_bloom = (na + nb                               # probe + build
+               + survivors * math.log2(survivors + 1)
+               + nb * math.log2(nb + 1))
+    if (use_bloom and min(na, nb) >= V2V_BLOOM_MIN_ENTRIES
+            and c_bloom < c_merge):
+        return JoinStrategyChoice(BLOOM_SORTMERGE, c_merge, c_bloom)
+    return JoinStrategyChoice(SORTMERGE, c_merge, c_bloom)
+
+
+# ---------------------------------------------------------------------------
 # Communication cost model (paper §4.7). Units: matrix entries moved.
 # ---------------------------------------------------------------------------
 

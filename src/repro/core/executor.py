@@ -1,4 +1,11 @@
-"""Physical plan execution (paper §5): evaluates optimized logical plans.
+"""Recursive tree-walk execution of logical plans (paper §5).
+
+Since the physical planner landed (``repro.plan``), this module is the
+**oracle**: the default ``collect()`` path lowers plans into a hash-consed
+operator DAG and executes that, while this executor keeps the original
+per-node recursive semantics that the DAG executor is property-tested
+against (``tests/test_plan_property.py``). The shared primitive semantics
+(``agg_dense``, ``select_dense``) are defined here and reused by both.
 
 Two execution tiers:
 
@@ -69,6 +76,43 @@ def agg_dense(v: jnp.ndarray, fn: AggFn, dim: AggDim) -> jnp.ndarray:
     if dim is AggDim.ROW:
         return out[:, None]
     return out[None, :] if out.ndim == 1 else out
+
+
+def ew_values(op: EWOp, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Element-wise merge on raw arrays (0/0 := 0 for division)."""
+    if op is EWOp.ADD:
+        return a + b
+    if op is EWOp.MUL:
+        return a * b
+    return jnp.where(b == 0, 0.0, a / jnp.where(b == 0, 1.0, b))
+
+
+def leaf_value(e: Leaf, env: Dict[str, BlockMatrix],
+               block_size: int) -> BlockMatrix:
+    """Resolve a leaf: catalog lookup or synthesized ``ones(m,n)``."""
+    if e.name in env:
+        return env[e.name]
+    if e.name.startswith("ones("):
+        return BlockMatrix.from_dense(jnp.ones(e.shape, jnp.float32),
+                                      block_size)
+    raise KeyError(f"unbound matrix {e.name!r}")
+
+
+def as_matrix(r: Result) -> BlockMatrix:
+    if isinstance(r, BlockMatrix):
+        return r
+    raise TypeError(
+        "operator expected a matrix but got an order-"
+        f"{r.order} tensor; aggregate it first")
+
+
+def dense_join_result(out: jnp.ndarray, block_size: int) -> Result:
+    """Wrap a dense-tier join output: matrix, or COO view for order 3/4."""
+    if out.ndim == 2:
+        return BlockMatrix.from_dense(out, block_size)
+    idx = np.argwhere(np.asarray(out) != 0)
+    vals = np.asarray(out)[tuple(idx.T)]
+    return COOTensor(idx, vals, tuple(out.shape))
 
 
 def select_dense(v: jnp.ndarray, pred: Conjunction) -> jnp.ndarray:
@@ -159,20 +203,10 @@ class Executor:
         raise TypeError(type(e))
 
     def _leaf(self, e: Leaf) -> BlockMatrix:
-        if e.name in self.env:
-            return self.env[e.name]
-        # synthesized constant leaves from rewrite rules: ones(m,n)
-        if e.name.startswith("ones("):
-            return BlockMatrix.from_dense(jnp.ones(e.shape, jnp.float32),
-                                          self.block_size)
-        raise KeyError(f"unbound matrix {e.name!r}")
+        return leaf_value(e, self.env, self.block_size)
 
     def _as_matrix(self, r: Result) -> BlockMatrix:
-        if isinstance(r, BlockMatrix):
-            return r
-        raise TypeError(
-            "operator expected a matrix but got an order-"
-            f"{r.order} tensor; aggregate it first")
+        return as_matrix(r)
 
     # -- sparsity-aware elementwise (the PNMF masked-matmul pattern) ----------
     def _elemwise(self, e: ElemWise) -> BlockMatrix:
@@ -201,14 +235,8 @@ class Executor:
                     return BlockMatrix(v, sp.block_mask, self.block_size)
         a = self._as_matrix(self._eval(e.a))
         b = self._as_matrix(self._eval(e.b))
-        if e.op is EWOp.ADD:
-            v = a.value + b.value
-        elif e.op is EWOp.MUL:
-            v = a.value * b.value
-        else:
-            v = jnp.where(b.value == 0, 0.0, a.value
-                          / jnp.where(b.value == 0, 1.0, b.value))
-        return BlockMatrix.from_dense(v, self.block_size)
+        return BlockMatrix.from_dense(ew_values(e.op, a.value, b.value),
+                                      self.block_size)
 
     def _join(self, e: Join) -> Result:
         a = self._as_matrix(self._eval(e.a))
@@ -216,11 +244,7 @@ class Executor:
         self.stats["joins"] += 1
         if self.mode == "dense":
             out = joinsmod.join_dense(a.value, b.value, e.pred, e.merge)
-            if out.ndim == 2:
-                return BlockMatrix.from_dense(out, self.block_size)
-            idx = np.argwhere(np.asarray(out) != 0)
-            vals = np.asarray(out)[tuple(idx.T)]
-            return COOTensor(idx, vals, tuple(out.shape))
+            return dense_join_result(out, self.block_size)
         return joinsmod.join_sparse(a, b, e.pred, e.merge,
                                     use_bloom=self.use_bloom,
                                     kernel_backend=self.kernel_backend)

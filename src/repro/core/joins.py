@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bloom as bloommod
+from repro.core import cost as costmod
 from repro.core.expr import MergeFn
 from repro.core.matrix import BlockMatrix, BlockTensor
 from repro.core.predicates import Field, JoinKind, JoinPred
@@ -328,12 +329,17 @@ def d2d_sparse(a: BlockMatrix, b: BlockMatrix, left: Field, right: Field,
 def v2v_sparse(a: BlockMatrix, b: BlockMatrix, merge: MergeFn,
                use_bloom: bool = True,
                bloom_params: bloommod.BloomParams = bloommod.BloomParams(),
-               kernel_backend: Optional[str] = None) -> COOTensor:
+               kernel_backend: Optional[str] = None,
+               strategy: Optional[str] = None) -> COOTensor:
     """Entry join with Bloom pre-filter + sort-merge on exact values (§4.5/§4.7).
 
     The Bloom filter is built over the (nonzero, if sparsity-inducing) entries
     of B; A's entries are probed and only survivors enter the exact join.
+    ``strategy`` (``"bloom-sortmerge"`` / ``"sortmerge"``) overrides
+    ``use_bloom`` — the physical planner passes its cost-gated choice here.
     """
+    if strategy is not None:
+        use_bloom = strategy == costmod.BLOOM_SORTMERGE
     prof = analyze_merge(merge)
     skip_zeros = prof.inducing_x or prof.inducing_y
     ai, av, adense = _coo_of(a)
@@ -412,7 +418,8 @@ def d2v_sparse(a: BlockMatrix, b: BlockMatrix, dim: Field,
 
 def join_sparse(a: BlockMatrix, b: BlockMatrix, pred: JoinPred,
                 merge: MergeFn, use_bloom: bool = True,
-                kernel_backend: Optional[str] = None):
+                kernel_backend: Optional[str] = None,
+                strategy: Optional[str] = None):
     k = pred.kind
     if k is JoinKind.CROSS:
         return cross_sparse(a, b, merge)
@@ -426,7 +433,7 @@ def join_sparse(a: BlockMatrix, b: BlockMatrix, pred: JoinPred,
         return d2d_sparse(a, b, pred.left, pred.right, merge)
     if k is JoinKind.V2V:
         return v2v_sparse(a, b, merge, use_bloom=use_bloom,
-                          kernel_backend=kernel_backend)
+                          kernel_backend=kernel_backend, strategy=strategy)
     if k is JoinKind.D2V:
         return d2v_sparse(a, b, pred.left, merge)
     if k is JoinKind.V2D:

@@ -33,6 +33,15 @@ class OptimizeResult:
     def speedup_estimate(self) -> float:
         return self.original_cost / max(self.optimized_cost, 1e-12)
 
+    def describe(self, original: Expr) -> str:
+        """Logical EXPLAIN text: original vs. rewritten plan with costs."""
+        return (f"== original (cost {self.original_cost:.4g}) ==\n"
+                f"{original.pretty()}\n"
+                f"== optimized (cost {self.optimized_cost:.4g}, "
+                f"est speedup {self.speedup_estimate:.2f}x) ==\n"
+                f"{self.plan.pretty()}\n"
+                f"fired: {', '.join(self.fired) or '(none)'}")
+
 
 def _apply_rules_once(e: Expr, fired: List[str]) -> Expr:
     def visit(node: Expr) -> Optional[Expr]:

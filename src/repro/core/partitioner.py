@@ -44,14 +44,19 @@ class DistributedJoinPlan:
                 f"entries over N={self.n_workers}")
 
 
-def plan_join(pred: JoinPred, a: BlockMatrix, b: BlockMatrix,
-              n_workers: int, eta_a: float = 0.1,
-              eta_b: float = 0.1) -> DistributedJoinPlan:
-    size_a = float(np.asarray(a.nnz())) if a.scheme != "b" else float(
-        np.asarray(a.nnz()))
-    size_b = float(np.asarray(b.nnz()))
+def plan_join_static(pred: JoinPred, size_a: float, size_b: float,
+                     n_workers: int, s_a: str = costmod.RANDOM,
+                     s_b: str = costmod.RANDOM, eta_a: float = 0.1,
+                     eta_b: float = 0.1) -> DistributedJoinPlan:
+    """Assign partition schemes from *size estimates* alone.
+
+    This is the plan-time entry point used by ``repro.plan.builder``: no
+    matrix data is needed, only the |A|/|B| estimates (nnz for sparse, m·n
+    for dense) and the current schemes, so joins can be annotated with
+    their scheme pair before anything is materialized.
+    """
     choice = costmod.assign_schemes(
-        pred, size_a, size_b, n_workers, s_a=a.scheme, s_b=b.scheme,
+        pred, size_a, size_b, n_workers, s_a=s_a, s_b=s_b,
         eta_a=eta_a, eta_b=eta_b)
     return DistributedJoinPlan(
         choice,
@@ -59,6 +64,16 @@ def plan_join(pred: JoinPred, a: BlockMatrix, b: BlockMatrix,
         costmod.scheme_to_spec(choice.scheme_b, WORKER_AXIS),
         n_workers,
     )
+
+
+def plan_join(pred: JoinPred, a: BlockMatrix, b: BlockMatrix,
+              n_workers: int, eta_a: float = 0.1,
+              eta_b: float = 0.1) -> DistributedJoinPlan:
+    size_a = float(np.asarray(a.nnz()))
+    size_b = float(np.asarray(b.nnz()))
+    return plan_join_static(pred, size_a, size_b, n_workers,
+                            s_a=a.scheme, s_b=b.scheme,
+                            eta_a=eta_a, eta_b=eta_b)
 
 
 def _local_overlay(f: Callable, transpose: bool):

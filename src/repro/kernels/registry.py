@@ -156,6 +156,19 @@ def resolve_backend(name: str, backend: Optional[str] = None) -> str:
     return DENSE
 
 
+def planned_backend(name: str, backend: Optional[str] = None) -> str:
+    """Resolve kernel ``name``'s backend at *plan time*.
+
+    The physical planner (``repro.plan.builder``) annotates each
+    kernel-dispatching DAG node with the backend it will run on, using the
+    exact policy ``dispatch`` applies at call time (explicit arg >
+    ``REPRO_KERNEL_BACKEND`` > TPU capability > dense). Keeping this a
+    registry function guarantees plan annotations and runtime dispatch can
+    never disagree.
+    """
+    return resolve_backend(name, backend)
+
+
 def dispatch(name: str, *args: Any, backend: Optional[str] = None,
              tiles: Optional[Dict[str, int]] = None, **kw: Any):
     """Run kernel ``name`` on the resolved backend.

@@ -1,0 +1,190 @@
+"""Lower a logical ``Expr`` tree into a hash-consed physical operator DAG.
+
+Hash-consing is the CSE mechanism: each distinct subplan gets exactly one
+``PhysicalNode`` (keyed on operator kind + parameters + *physical* child
+ids), so a subexpression like ``XᵀX`` used twice in one query appears once
+in the DAG and is computed once by the DAG executor.
+
+All strategy decisions the tree-walk executor used to make per visit are
+made here, once, at plan time:
+
+* the SDDMM pattern ``sparse ∘ (W×H)`` is detected structurally and lowered
+  to a ``MASKED_ELEMWISE`` node wired straight to the matmul's factors;
+* entry joins (V2V) are cost-gated between Bloom-filtered and plain
+  sort-merge (``core.cost.choose_v2v_strategy``);
+* kernel-dispatching nodes are annotated with the registry backend
+  (``kernels.registry.planned_backend``);
+* on a multi-device mesh, joins get the partitioning-scheme pair from the
+  paper's communication cost model (``core.partitioner.plan_join_static``).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+
+from repro.core import cost as costmod
+from repro.core import partitioner as partmod
+from repro.core.expr import (
+    Agg, ElemWise, EWOp, Expr, Inverse, Join, Leaf, MatMul, MatScalar,
+    Select, Transpose, count_nodes,
+)
+from repro.core.predicates import JoinKind
+from repro.plan import ops as P
+
+# The SDDMM rewrite only pays when the gating side is block-sparse enough;
+# same threshold the tree-walk executor applied per visit.
+MASKED_PATTERN_MAX_SPARSITY = 0.5
+
+
+def _strategy_for_join(e: Join, mode: str, use_bloom: bool) -> str:
+    k = e.pred.kind
+    if mode == "dense":
+        return "dense"
+    if k is JoinKind.CROSS:
+        return "coo-cross"
+    if k in (JoinKind.DIRECT_OVERLAY, JoinKind.TRANSPOSE_OVERLAY):
+        return "block-skip-overlay"
+    if k is JoinKind.D2D:
+        return "coo-group-join"
+    if k is JoinKind.V2V:
+        return costmod.choose_v2v_strategy(
+            e.a.nnz_est, e.b.nnz_est, use_bloom=use_bloom).strategy
+    return "coo-route"  # D2V / V2D
+
+
+def _select_jit_safe(e: Select) -> bool:
+    # special predicates drop rows/cols data-dependently (dynamic shapes)
+    # and value atoms evaluate through numpy ufuncs; neither traces.
+    return e.pred.special is None and not e.pred.val_atoms()
+
+
+class _Builder:
+    def __init__(self, mode: str, block_size: int, use_bloom: bool,
+                 kernel_backend: Optional[str], n_workers: int):
+        self.mode = mode
+        self.block_size = block_size
+        self.use_bloom = use_bloom
+        self.kernel_backend = kernel_backend
+        self.n_workers = n_workers
+        self.nodes: List[P.PhysicalNode] = []
+        self.memo: Dict[tuple, int] = {}
+
+    # -- hash-consing core ----------------------------------------------------
+    def emit(self, kind: str, expr: Expr, children: Tuple[int, ...],
+             params: tuple, est_flops: float, **ann) -> int:
+        key = (kind, children, params)
+        hit = self.memo.get(key)
+        if hit is not None:
+            return hit
+        if any(len(self.nodes[c].shape) > 2 for c in children):
+            # an operator over an order-3/4 join output: the executors
+            # reject this at runtime (tensors must be aggregated first), so
+            # it must not be staged into jit where it would silently
+            # compute over the dense tensor instead of raising
+            ann["jit_safe"] = False
+        op_id = len(self.nodes)
+        self.nodes.append(P.PhysicalNode(
+            op_id=op_id, kind=kind, expr=expr, children=children,
+            shape=expr.shape, sparsity=expr.sparsity,
+            est_flops=est_flops, **ann))
+        self.memo[key] = op_id
+        return op_id
+
+    # -- lowering -------------------------------------------------------------
+    def lower(self, e: Expr) -> int:
+        if isinstance(e, Leaf):
+            return self.emit(P.LEAF, e, (), (e.name, e.shape, e.sparsity),
+                             0.0)
+        if isinstance(e, Transpose):
+            return self.emit(P.TRANSPOSE, e, (self.lower(e.x),), (),
+                             costmod.node_flops(e))
+        if isinstance(e, MatScalar):
+            return self.emit(P.MATSCALAR, e, (self.lower(e.x),),
+                             (e.op, e.beta), costmod.node_flops(e))
+        if isinstance(e, ElemWise):
+            return self._lower_elemwise(e)
+        if isinstance(e, MatMul):
+            return self.emit(P.MATMUL, e,
+                             (self.lower(e.a), self.lower(e.b)), (),
+                             costmod.node_flops(e))
+        if isinstance(e, Inverse):
+            return self.emit(P.INVERSE, e, (self.lower(e.x),), (),
+                             costmod.node_flops(e))
+        if isinstance(e, Select):
+            return self.emit(P.SELECT, e, (self.lower(e.x),), (e.pred,),
+                             costmod.node_flops(e),
+                             jit_safe=_select_jit_safe(e))
+        if isinstance(e, Agg):
+            return self.emit(P.AGG, e, (self.lower(e.x),), (e.fn, e.dim),
+                             costmod.node_flops(e))
+        if isinstance(e, Join):
+            return self._lower_join(e)
+        raise TypeError(type(e))
+
+    def _lower_elemwise(self, e: ElemWise) -> int:
+        if self.mode == "sparse" and e.op in (EWOp.MUL, EWOp.DIV):
+            # the tree-walk executor re-detected this pattern on every
+            # visit; the planner decides once, structurally
+            for sparse_side, mm_side, flip in ((e.a, e.b, False),
+                                               (e.b, e.a, True)):
+                if (isinstance(mm_side, MatMul)
+                        and sparse_side.sparsity
+                        < MASKED_PATTERN_MAX_SPARSITY):
+                    sp = self.lower(sparse_side)
+                    w = self.lower(mm_side.a)
+                    h = self.lower(mm_side.b)
+                    # cost: the matmul gated down to live blocks + the merge
+                    flops = (costmod.node_flops(mm_side)
+                             * max(sparse_side.sparsity, 1e-3)
+                             + float(e.size))
+                    return self.emit(
+                        P.MASKED_ELEMWISE, e, (sp, w, h), (e.op, flip),
+                        flops, kernel="masked_matmul",
+                        backend=self._backend("masked_matmul"),
+                        strategy="sddmm", jit_safe=False,
+                        meta={"flip": flip})
+        return self.emit(P.ELEMWISE, e,
+                         (self.lower(e.a), self.lower(e.b)), (e.op,),
+                         costmod.node_flops(e))
+
+    def _lower_join(self, e: Join) -> int:
+        strategy = _strategy_for_join(e, self.mode, self.use_bloom)
+        kernel = backend = None
+        if strategy == "block-skip-overlay":
+            kernel = "merge_join"
+        elif strategy == costmod.BLOOM_SORTMERGE:
+            kernel = "bloom_probe"
+        if kernel is not None:
+            backend = self._backend(kernel)
+        partition = None
+        if self.n_workers > 1:
+            partition = partmod.plan_join_static(
+                e.pred, costmod.size_of(e.a), costmod.size_of(e.b),
+                self.n_workers).choice
+        # sparse-tier joins run COO/bloom machinery on host; only the dense
+        # reference tier stages into jit
+        return self.emit(
+            P.JOIN, e, (self.lower(e.a), self.lower(e.b)),
+            (e.pred, e.merge), costmod.node_flops(e),
+            kernel=kernel, backend=backend, strategy=strategy,
+            partition=partition, jit_safe=(self.mode == "dense"))
+
+    def _backend(self, kernel: str) -> Optional[str]:
+        from repro.kernels import registry
+        return registry.planned_backend(kernel, self.kernel_backend)
+
+
+def build_plan(e: Expr, *, mode: str = "sparse", block_size: int = 256,
+               use_bloom: bool = True,
+               kernel_backend: Optional[str] = None,
+               n_workers: Optional[int] = None) -> P.PhysicalPlan:
+    """Lower (already-optimized) logical plan ``e`` into a physical DAG."""
+    assert mode in ("sparse", "dense")
+    if n_workers is None:
+        n_workers = jax.device_count()
+    b = _Builder(mode, block_size, use_bloom, kernel_backend, n_workers)
+    root = b.lower(e)
+    return P.PhysicalPlan(
+        nodes=tuple(b.nodes), root=root, mode=mode, block_size=block_size,
+        n_workers=n_workers, logical_nodes=count_nodes(e))

@@ -1,0 +1,207 @@
+"""Execute a physical operator DAG (the default ``collect()`` path).
+
+Evaluation walks ``plan.nodes`` in order — the builder emits children
+before parents, so the list *is* a topological order — and memoizes every
+result by op id. Because hash-consing gives one node per distinct subplan,
+each shared subexpression is computed exactly once (``stats`` records the
+per-kind evaluation counts so tests can assert it).
+
+Two paths:
+
+* **eager** — per-node evaluation reusing the exact primitive semantics of
+  the tree-walk oracle (``core.executor.agg_dense``/``select_dense``,
+  ``core.joins``), so the DAG executor is value-equivalent by construction;
+* **jit-staged dense** — when every node is jit-safe and the plan was built
+  for ``mode="dense"``, the whole DAG is staged into one ``jax.jit``-ed
+  function over the leaf arrays (compiled once per plan, cached on the
+  ``PhysicalPlan``), letting XLA fuse across operators.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import joins as joinsmod
+# shared primitive semantics: defined once next to the tree-walk oracle so
+# the two engines cannot drift
+from repro.core.executor import (
+    agg_dense, as_matrix, dense_join_result, ew_values, leaf_value,
+    select_dense,
+)
+from repro.core.expr import Agg, ElemWise, EWOp, Join, MatScalar, Select
+from repro.core.joins import COOTensor
+from repro.core.matrix import BlockMatrix
+from repro.plan import ops as P
+
+Result = Union[BlockMatrix, COOTensor]
+
+
+class PlanExecutor:
+    """Memoized topological evaluator for ``PhysicalPlan``s."""
+
+    def __init__(self, env: Dict[str, BlockMatrix], stage_jit: bool = True):
+        self.env = env
+        self.stage_jit = stage_jit
+        self.stats: Dict[str, int] = {
+            "node_evals": 0, "matmuls": 0, "masked_matmuls": 0, "joins": 0,
+            "staged": 0,
+        }
+
+    # -- public ---------------------------------------------------------------
+    def run(self, plan: P.PhysicalPlan) -> Result:
+        if plan.mode == "dense" and self.stage_jit and plan.jit_safe:
+            return self._run_staged(plan)
+        return self._run_eager(plan)
+
+    # -- eager path -----------------------------------------------------------
+    def _run_eager(self, plan: P.PhysicalPlan) -> Result:
+        results: Dict[int, Result] = {}
+        for node in plan.nodes:
+            args = [results[c] for c in node.children]
+            results[node.op_id] = self._eval(plan, node, args)
+            self.stats["node_evals"] += 1
+        return results[plan.root]
+
+    def _eval(self, plan: P.PhysicalPlan, node: P.PhysicalNode,
+              args: List[Result]) -> Result:
+        bs = plan.block_size
+        k = node.kind
+        if k == P.LEAF:
+            return leaf_value(node.expr, self.env, bs)
+        if k == P.TRANSPOSE:
+            return BlockMatrix.from_dense(as_matrix(args[0]).value.T, bs)
+        if k == P.MATSCALAR:
+            e: MatScalar = node.expr
+            x = as_matrix(args[0]).value
+            v = x + e.beta if e.op is EWOp.ADD else x * e.beta
+            return BlockMatrix.from_dense(v, bs)
+        if k == P.ELEMWISE:
+            e: ElemWise = node.expr
+            v = ew_values(e.op, as_matrix(args[0]).value,
+                          as_matrix(args[1]).value)
+            return BlockMatrix.from_dense(v, bs)
+        if k == P.MASKED_ELEMWISE:
+            return self._masked_elemwise(plan, node, args)
+        if k == P.MATMUL:
+            a, b = as_matrix(args[0]).value, as_matrix(args[1]).value
+            self.stats["matmuls"] += 1
+            v = jnp.dot(a, b, preferred_element_type=a.dtype)
+            return BlockMatrix.from_dense(v, bs)
+        if k == P.INVERSE:
+            return BlockMatrix.from_dense(
+                jnp.linalg.inv(as_matrix(args[0]).value), bs)
+        if k == P.SELECT:
+            e: Select = node.expr
+            return BlockMatrix.from_dense(
+                select_dense(as_matrix(args[0]).value, e.pred), bs)
+        if k == P.AGG:
+            e: Agg = node.expr
+            return BlockMatrix.from_dense(
+                agg_dense(as_matrix(args[0]).value, e.fn, e.dim), bs)
+        if k == P.JOIN:
+            return self._join(plan, node, args)
+        raise TypeError(k)
+
+    def _masked_elemwise(self, plan: P.PhysicalPlan, node: P.PhysicalNode,
+                         args: List[Result]) -> BlockMatrix:
+        e: ElemWise = node.expr
+        flip = node.meta["flip"]
+        sp = as_matrix(args[0])
+        w, h = as_matrix(args[1]), as_matrix(args[2])
+        from repro.kernels import registry
+        prod = registry.dispatch(
+            "masked_matmul", w.value, h.value, sp.block_mask,
+            backend=node.backend, block_size=plan.block_size)
+        self.stats["masked_matmuls"] += 1
+        if e.op is EWOp.MUL:
+            v = sp.value * prod
+        else:
+            num, den = (prod, sp.value) if flip else (sp.value, prod)
+            v = jnp.where((num == 0) | (den == 0), 0.0,
+                          num / jnp.where(den == 0, 1.0, den))
+        return BlockMatrix(v, sp.block_mask, plan.block_size)
+
+    def _join(self, plan: P.PhysicalPlan, node: P.PhysicalNode,
+              args: List[Result]) -> Result:
+        e: Join = node.expr
+        a, b = as_matrix(args[0]), as_matrix(args[1])
+        self.stats["joins"] += 1
+        if plan.mode == "dense":
+            out = joinsmod.join_dense(a.value, b.value, e.pred, e.merge)
+            return dense_join_result(out, plan.block_size)
+        # node.strategy overrides use_bloom inside v2v_sparse; other join
+        # kinds ignore both
+        return joinsmod.join_sparse(
+            a, b, e.pred, e.merge,
+            kernel_backend=node.backend, strategy=node.strategy)
+
+    # -- jit-staged dense path ------------------------------------------------
+    def _run_staged(self, plan: P.PhysicalPlan) -> Result:
+        staged = plan._staged_fn
+        if staged is None:
+            staged = _stage(plan)
+            plan._staged_fn = staged
+        fn, leaf_names = staged
+        for name in leaf_names:
+            if name not in self.env:
+                raise KeyError(f"unbound matrix {name!r}")
+        leaf_vals = tuple(self.env[name].value for name in leaf_names)
+        self.stats["staged"] += 1
+        self.stats["node_evals"] += plan.n_nodes
+        out = fn(*leaf_vals)
+        return dense_join_result(out, plan.block_size)
+
+
+def _stage(plan: P.PhysicalPlan):
+    """Compile the whole DAG into one jit-ed function of the leaf arrays.
+
+    Synthesized ``ones(...)`` leaves are constants and materialize inside
+    the trace; only catalog leaves become function arguments (so shape
+    changes in the session environment simply retrace).
+    """
+    env_leaves = [n for n in plan.nodes
+                  if n.kind == P.LEAF and not n.expr.name.startswith("ones(")]
+    leaf_names = tuple(n.expr.name for n in env_leaves)
+    arg_index = {n.op_id: i for i, n in enumerate(env_leaves)}
+
+    def fn(*leaf_vals):
+        vals: Dict[int, jnp.ndarray] = {}
+        for node in plan.nodes:
+            k = node.kind
+            e = node.expr
+            ch = [vals[c] for c in node.children]
+            if k == P.LEAF:
+                if node.op_id in arg_index:
+                    v = leaf_vals[arg_index[node.op_id]]
+                else:
+                    v = jnp.ones(e.shape, jnp.float32)
+            elif k == P.TRANSPOSE:
+                v = ch[0].T
+            elif k == P.MATSCALAR:
+                v = ch[0] + e.beta if e.op is EWOp.ADD else ch[0] * e.beta
+            elif k == P.ELEMWISE:
+                v = ew_values(e.op, ch[0], ch[1])
+            elif k == P.MATMUL:
+                v = jnp.dot(ch[0], ch[1],
+                            preferred_element_type=ch[0].dtype)
+            elif k == P.INVERSE:
+                v = jnp.linalg.inv(ch[0])
+            elif k == P.SELECT:
+                v = select_dense(ch[0], e.pred)
+            elif k == P.AGG:
+                v = agg_dense(ch[0], e.fn, e.dim)
+            elif k == P.JOIN:
+                v = joinsmod.join_dense(ch[0], ch[1], e.pred, e.merge)
+            else:
+                raise TypeError(f"node kind {k!r} is not jit-stageable")
+            vals[node.op_id] = v
+        return vals[plan.root]
+
+    return jax.jit(fn), leaf_names
+
+
+def execute_plan(plan: P.PhysicalPlan, env: Dict[str, BlockMatrix],
+                 stage_jit: bool = True) -> Result:
+    return PlanExecutor(env, stage_jit=stage_jit).run(plan)

@@ -1,0 +1,54 @@
+"""Render a physical plan: per-node cost, strategy, backend and sharding.
+
+The output is the EXPLAIN surface for plan decisions — what the paper's
+optimizer chooses (join strategy, partition schemes) plus what this
+reproduction adds (kernel backend, CSE sharing). Shared nodes print once
+with their full annotation; later references render as ``(shared)`` so the
+DAG structure is visible in the tree layout.
+"""
+from __future__ import annotations
+
+from typing import List, Set
+
+from repro.plan.ops import PhysicalNode, PhysicalPlan
+
+
+def _annotations(n: PhysicalNode) -> str:
+    parts: List[str] = []
+    if n.strategy:
+        parts.append(f"strategy={n.strategy}")
+    if n.kernel:
+        parts.append(f"kernel={n.kernel}")
+    if n.backend:
+        parts.append(f"backend={n.backend}")
+    if n.partition is not None:
+        parts.append(
+            f"schemes=({n.partition.scheme_a},{n.partition.scheme_b})"
+            f" comm={n.partition.total:.3g}")
+    return ("  [" + " ".join(parts) + "]") if parts else ""
+
+
+def render(plan: PhysicalPlan) -> str:
+    header = (f"== physical plan: mode={plan.mode} workers={plan.n_workers}"
+              f" | {plan.n_nodes} ops from {plan.logical_nodes} logical"
+              f" nodes ({plan.shared_nodes} shared)"
+              f" | est {plan.est_flops:.4g} flops ==")
+    lines = [header]
+    seen: Set[int] = set()
+
+    def walk(op_id: int, indent: int) -> None:
+        n = plan.node(op_id)
+        pad = "  " * indent
+        if op_id in seen:
+            lines.append(f"{pad}#{op_id} {n.label()} (shared)")
+            return
+        seen.add(op_id)
+        lines.append(
+            f"{pad}#{op_id} {n.label()}  shape={n.shape}"
+            f" sp={n.sparsity:.3g} cost={n.est_flops:.4g}"
+            f"{_annotations(n)}")
+        for c in n.children:
+            walk(c, indent + 1)
+
+    walk(plan.root, 0)
+    return "\n".join(lines)

@@ -1,0 +1,263 @@
+"""Unit tests for the physical planner: hash-consing, compute-once
+semantics, strategy/backend/scheme annotation, EXPLAIN golden output."""
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import MergeFn, Session
+from repro.core import cost as costmod
+from repro.core.expr import (
+    Agg, AggDim, AggFn, Join, Leaf, MatMul, Transpose,
+)
+from repro.core.predicates import parse_join
+from repro.plan import PlanExecutor, build_plan, render
+from repro.plan import ops as P
+
+
+def _session(seed=0, n=16, density=0.3, **kw):
+    rng = np.random.default_rng(seed)
+    s = Session(block_size=8, **kw)
+    v = rng.normal(size=(n, n)).astype(np.float32)
+    keep = rng.uniform(size=(n, n)) < density
+    s.load(np.where(keep, v, 0).astype(np.float32), "X")
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Hash-consing / CSE
+# ---------------------------------------------------------------------------
+
+def test_shared_subplan_appears_once():
+    s = _session()
+    X = s.env["X"]
+    from repro.core.api import Matrix
+    x = Matrix(s, Leaf("X", X.shape, 0.3))
+    g = x.t().multiply(x)
+    q = g.add(g)
+    plan = s.physical_plan(q.plan)
+    assert plan.count(P.MATMUL) == 1
+    assert plan.count(P.LEAF) == 1
+    assert plan.n_nodes == 4          # leaf, transpose, matmul, elemwise
+    assert plan.logical_nodes == 9
+    assert plan.shared_nodes == 5
+
+
+def test_shared_matmul_computed_exactly_once():
+    s = _session()
+    from repro.core.api import Matrix
+    x = Matrix(s, Leaf("X", s.env["X"].shape, 0.3))
+    g = x.t().multiply(x)
+    q = g.add(g).add(g)               # three uses of XtX
+    ex = PlanExecutor(s.env)
+    out = ex.run(s.physical_plan(q.plan))
+    assert ex.stats["matmuls"] == 1
+    assert ex.stats["node_evals"] == 5
+    # and the result still equals three separate computations
+    tree = s.execute(q.plan, optimize=False, engine="tree")
+    np.testing.assert_allclose(np.asarray(out.value),
+                               np.asarray(tree.value), rtol=1e-5)
+
+
+def test_distinct_subplans_not_merged():
+    x = Leaf("X", (8, 8), 0.5)
+    y = Leaf("Y", (8, 8), 0.5)
+    plan = build_plan(MatMul(x, y), n_workers=1)
+    assert plan.count(P.LEAF) == 2
+    assert plan.shared_nodes == 0
+
+
+# ---------------------------------------------------------------------------
+# Plan-time strategy selection
+# ---------------------------------------------------------------------------
+
+def test_v2v_bloom_cost_gate():
+    small = costmod.choose_v2v_strategy(32, 32)
+    assert small.strategy == costmod.SORTMERGE
+    big = costmod.choose_v2v_strategy(1 << 17, 1 << 17)
+    assert big.strategy == costmod.BLOOM_SORTMERGE
+    assert big.cost_bloom < big.cost_sortmerge
+    forced = costmod.choose_v2v_strategy(1 << 17, 1 << 17, use_bloom=False)
+    assert forced.strategy == costmod.SORTMERGE
+
+
+def test_join_nodes_annotated_with_strategy_and_backend():
+    mul = MergeFn("mul", lambda a, b: a * b)
+    big = Join(Leaf("A", (512, 512), 0.5), Leaf("B", (512, 512), 0.5),
+               parse_join("VAL=VAL"), mul)
+    node = build_plan(big, kernel_backend="dense", n_workers=1).node(2)
+    assert node.strategy == costmod.BLOOM_SORTMERGE
+    assert node.kernel == "bloom_probe"
+    assert node.backend == "dense"
+    tiny = Join(Leaf("A", (8, 8), 0.5), Leaf("B", (8, 8), 0.5),
+                parse_join("VAL=VAL"), mul)
+    assert build_plan(tiny, n_workers=1).node(2).strategy \
+        == costmod.SORTMERGE
+
+
+def test_masked_elemwise_lowered_at_plan_time():
+    a = Leaf("A", (32, 32), 0.1)
+    w, h = Leaf("W", (32, 4), 1.0), Leaf("H", (4, 32), 1.0)
+    from repro.core.expr import ElemWise, EWOp
+    e = ElemWise(a, MatMul(w, h), EWOp.MUL)
+    plan = build_plan(e, mode="sparse", kernel_backend="dense")
+    root = plan.node(plan.root)
+    assert root.kind == P.MASKED_ELEMWISE
+    assert root.kernel == "masked_matmul"
+    assert len(root.children) == 3    # sparse gate + both matmul factors
+    assert plan.count(P.MATMUL) == 0  # the matmul folded into the SDDMM op
+    # dense tier keeps the plain elemwise + matmul shape
+    dense = build_plan(e, mode="dense")
+    assert dense.count(P.MASKED_ELEMWISE) == 0
+    assert dense.count(P.MATMUL) == 1
+
+
+def test_partition_schemes_annotated_on_mesh_plans():
+    mul = MergeFn("mul", lambda a, b: a * b)
+    j = Join(Leaf("A", (64, 64), 1.0), Leaf("B", (64, 64), 1.0),
+             parse_join("RID=RID"), mul)
+    single = build_plan(j, n_workers=1)
+    assert single.node(single.root).partition is None
+    mesh = build_plan(j, n_workers=4)
+    part = mesh.node(mesh.root).partition
+    assert part is not None
+    assert part.scheme_a in costmod.SCHEMES
+    assert part.scheme_b in costmod.SCHEMES
+    assert part.total >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# DAG execution paths
+# ---------------------------------------------------------------------------
+
+def test_staged_dense_path_used_and_correct():
+    s = _session(mode="dense")
+    from repro.core.api import Matrix
+    x = Matrix(s, Leaf("X", s.env["X"].shape, 0.3))
+    q = x.t().multiply(x).add(x)
+    pplan = s.physical_plan(q.plan)
+    assert pplan.jit_safe
+    ex = PlanExecutor(s.env)
+    out = ex.run(pplan)
+    assert ex.stats["staged"] == 1
+    tree = s.execute(q.plan, optimize=False, engine="tree")
+    np.testing.assert_allclose(np.asarray(out.value),
+                               np.asarray(tree.value), rtol=1e-5)
+
+
+def test_val_select_falls_back_to_eager():
+    s = _session(mode="dense")
+    from repro.core.api import Matrix
+    x = Matrix(s, Leaf("X", s.env["X"].shape, 0.3))
+    q = x.select("VAL>0")
+    pplan = s.physical_plan(q.plan)
+    assert not pplan.jit_safe
+    ex = PlanExecutor(s.env)
+    out = ex.run(pplan)
+    assert ex.stats["staged"] == 0
+    tree = s.execute(q.plan, optimize=False, engine="tree")
+    np.testing.assert_allclose(np.asarray(out.value),
+                               np.asarray(tree.value), rtol=1e-5)
+
+
+def test_tensor_intermediate_raises_like_oracle():
+    # an op over an order-4 join output must raise on the DAG engine too —
+    # never silently compute inside the staged jit path
+    rng = np.random.default_rng(4)
+    s = Session(block_size=8, mode="dense")
+    s.load(rng.normal(size=(6, 6)).astype(np.float32), "A")
+    s.load(rng.normal(size=(6, 6)).astype(np.float32), "B")
+    from repro.core.api import Matrix
+    a = Matrix(s, Leaf("A", (6, 6), 1.0))
+    b = Matrix(s, Leaf("B", (6, 6), 1.0))
+    mul = MergeFn("mul", lambda x, y: x * y)
+    q = a.join(b, "VAL=VAL", mul).add(2.0)
+    pplan = s.physical_plan(q.plan)
+    assert not pplan.jit_safe
+    with pytest.raises(TypeError, match="order-4"):
+        q.collect(optimize=False, engine="dag")
+    with pytest.raises(TypeError, match="order-4"):
+        q.collect(optimize=False, engine="tree")
+
+
+def test_plan_cache_reused_across_collects():
+    s = _session()
+    from repro.core.api import Matrix
+    x = Matrix(s, Leaf("X", s.env["X"].shape, 0.3))
+    q = x.t().multiply(x)
+    q.collect()
+    q.collect()
+    assert len(s._plan_cache) == 1
+
+
+def test_session_engine_default_and_override():
+    s = _session(engine="tree")
+    from repro.core.api import Matrix
+    x = Matrix(s, Leaf("X", s.env["X"].shape, 0.3))
+    q = x.t().multiply(x)
+    tree = q.collect()                 # session default: tree
+    dag = q.collect(engine="dag")
+    np.testing.assert_allclose(np.asarray(dag.value),
+                               np.asarray(tree.value), rtol=1e-5)
+
+
+def test_v2v_strategy_override_matches_bloom():
+    rng = np.random.default_rng(3)
+    s = Session(block_size=8)
+    v = np.round(np.where(rng.uniform(size=(32, 32)) < 0.5,
+                          rng.normal(size=(32, 32)), 0), 1)
+    A = s.load(v.astype(np.float32), "A")
+    B = s.load(v.T.copy().astype(np.float32), "B")
+    mul = MergeFn("mul", lambda a, b: a * b)
+    from repro.core import joins as joinsmod
+    pred = parse_join("VAL=VAL")
+    with_bloom = joinsmod.join_sparse(s.env["A"], s.env["B"], pred, mul,
+                                      strategy=costmod.BLOOM_SORTMERGE)
+    without = joinsmod.join_sparse(s.env["A"], s.env["B"], pred, mul,
+                                   strategy=costmod.SORTMERGE)
+    assert with_bloom.nnz == without.nnz
+    del A, B
+
+
+# ---------------------------------------------------------------------------
+# EXPLAIN
+# ---------------------------------------------------------------------------
+
+def test_explain_physical_golden_trace():
+    X = Leaf("X", (12, 8), 0.25)
+    trace = Agg(MatMul(Transpose(X), X), AggFn.SUM, AggDim.DIAG)
+    got = render(build_plan(trace, mode="sparse", block_size=8, n_workers=1))
+    expected = textwrap.dedent("""\
+        == physical plan: mode=sparse workers=1 | 4 ops from 5 logical nodes (1 shared) | est 200 flops ==
+        #3 Agg[sum,d]  shape=(1, 1) sp=1 cost=8
+          #2 MatMul  shape=(8, 8) sp=0.539 cost=96
+            #1 Transpose  shape=(8, 12) sp=0.25 cost=96
+              #0 Leaf[X]  shape=(12, 8) sp=0.25 cost=0
+            #0 Leaf[X] (shared)""")
+    assert got == expected
+
+
+def test_explain_physical_golden_bloom_join_with_schemes():
+    mul = MergeFn("mul", lambda x, y: x * y)
+    j = Join(Leaf("A", (512, 512), 0.5), Leaf("B", (512, 512), 0.5),
+             parse_join("VAL=VAL"), mul)
+    got = render(build_plan(j, mode="sparse", block_size=8, n_workers=4,
+                            kernel_backend="dense"))
+    expected = textwrap.dedent("""\
+        == physical plan: mode=sparse workers=4 | 3 ops from 3 logical nodes (0 shared) | est 1.718e+10 flops ==
+        #2 Join[VAL=VAL, f=mul]  shape=(512, 512, 512, 512) sp=0.025 cost=1.718e+10  [strategy=bloom-sortmerge kernel=bloom_probe backend=dense schemes=(r,r) comm=6.55e+05]
+          #0 Leaf[A]  shape=(512, 512) sp=0.5 cost=0
+          #1 Leaf[B]  shape=(512, 512) sp=0.5 cost=0""")
+    assert got == expected
+
+
+def test_explain_api_surface():
+    s = _session()
+    from repro.core.api import Matrix
+    x = Matrix(s, Leaf("X", s.env["X"].shape, 0.3))
+    g = x.t().multiply(x)
+    out = g.add(g).explain(physical=True)
+    assert "physical plan" in out
+    assert "(shared)" in out
+    logical = g.add(g).explain()
+    assert "optimized" in logical

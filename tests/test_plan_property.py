@@ -1,0 +1,93 @@
+"""Property: the planned DAG executor is value-equivalent to the tree-walk
+oracle over randomized expressions — both tiers, optimize on and off."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import MergeFn, Session
+from repro.core.joins import COOTensor
+
+DIMS = (12, 16)
+
+# module-level merge fns so the sparsity-profile cache sees stable names
+MERGE_ADD = MergeFn("prop_add", lambda x, y: x + y)
+MERGE_MUL = MergeFn("prop_mul", lambda x, y: x * y)
+
+
+def _rand_matrix(rng_seed, density):
+    rng = np.random.default_rng(rng_seed)
+    v = rng.normal(size=DIMS).astype(np.float32)
+    keep = rng.uniform(size=DIMS) < density
+    return np.where(keep, v, 0).astype(np.float32)
+
+
+@st.composite
+def plans(draw):
+    """A random pipeline of unary/binary ops (incl. overlay joins) ending
+    in an aggregation — every op chainable on the matrix tier."""
+    seed = draw(st.integers(0, 2**16))
+    density = draw(st.sampled_from([0.1, 0.5, 1.0]))
+    s = Session(block_size=8)
+    a = s.load(_rand_matrix(seed, density))
+    b = s.load(_rand_matrix(seed + 1, density))
+    mx = a
+    n_ops = draw(st.integers(1, 4))
+    for _ in range(n_ops):
+        op = draw(st.sampled_from(
+            ["t", "scalar_add", "scalar_mul", "ewadd", "ewmul", "matmul",
+             "select_row", "select_val", "overlay", "reuse"]))
+        if op == "t":
+            mx = mx.t()
+        elif op == "scalar_add":
+            mx = mx.add(draw(st.sampled_from([-1.5, 0.5, 2.0])))
+        elif op == "scalar_mul":
+            mx = mx.emul(draw(st.sampled_from([-2.0, 0.5, 3.0])))
+        elif op == "ewadd" and mx.plan.shape == b.plan.shape:
+            mx = mx.add(b)
+        elif op == "ewmul" and mx.plan.shape == b.plan.shape:
+            mx = mx.emul(b)
+        elif op == "matmul":
+            if mx.plan.shape[1] == b.plan.shape[0]:
+                mx = mx.multiply(b)
+            elif mx.plan.shape[1] == b.plan.shape[1]:
+                mx = mx.multiply(b.t())
+        elif op == "select_row":
+            hi = mx.plan.shape[0] - 1
+            if hi >= 1:
+                mx = mx.select(f"RID={draw(st.integers(0, hi))}")
+        elif op == "select_val":
+            mx = mx.select("VAL>0")
+        elif op == "overlay" and mx.plan.shape == b.plan.shape:
+            mx = mx.join(b, "RID=RID AND CID=CID",
+                         draw(st.sampled_from([MERGE_ADD, MERGE_MUL])))
+        elif op == "reuse":
+            # repeated subexpression: the hash-consing hot case
+            mx = mx.add(mx)
+    fn = draw(st.sampled_from(["sum", "nnz", "avg", "max", "min"]))
+    dim = draw(st.sampled_from(["r", "c", "a"]))
+    return mx.agg(fn, dim)
+
+
+def _values(result):
+    if isinstance(result, COOTensor):
+        return result.to_dense()
+    return np.asarray(result.value)
+
+
+@settings(max_examples=40, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow,
+                                 HealthCheck.data_too_large])
+@given(mx=plans())
+def test_dag_equals_tree_walk(mx):
+    s = mx.session
+    for mode in ("sparse", "dense"):
+        s.mode = mode
+        for optimize in (True, False):
+            dag = _values(mx.collect(optimize=optimize, engine="dag"))
+            tree = _values(mx.collect(optimize=optimize, engine="tree"))
+            np.testing.assert_allclose(
+                dag, tree, atol=1e-3, rtol=1e-3,
+                err_msg=f"mode={mode} optimize={optimize}")
+    s.mode = "sparse"
