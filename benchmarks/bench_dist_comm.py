@@ -1,0 +1,123 @@
+"""Distributed execution: per-join jit vs whole-plan SPMD staging.
+
+Workload: the pipeline ``((select(XᵀX) ⋈ Y) ⋈ Y) ⋈ Y`` on the worker
+mesh (the ISSUE's select(XᵀX) ⋈ Y shape, extended so per-program
+overheads are measurable above the matmul). The legacy path runs each
+operator in its own jitted program with sharding constraints (a host
+round-trip between ops, collectives fenced at every program boundary —
+how ``core.partitioner.distributed_*`` executed joins before the
+plan-wide refactor, minus its per-call retracing). The staged path
+compiles the whole physical DAG into ONE GSPMD program with node outputs
+pinned to the propagated schemes (``repro.plan.schemes``).
+
+Also validates the cost model end-to-end: the scheme pass's predicted
+entries-moved total is compared against HLO-measured network-wide
+collective bytes of the staged program (``plan.executor.
+staged_collective_bytes``) — the Fig. 11c-style check, per plan instead
+of per join.
+
+Needs a multi-device topology; run with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` on CPU.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, timeit
+
+
+def run(rng) -> None:
+    import jax
+    import jax.numpy as jnp
+
+    n_dev = jax.device_count()
+    if n_dev < 2:
+        row("dist_comm", None,
+            "skipped(single device; set XLA_FLAGS="
+            "--xla_force_host_platform_device_count=8)")
+        return
+
+    from repro.core import Session
+    from repro.core import cost as costmod
+    from repro.core.api import Matrix
+    from repro.core.expr import Leaf
+    from repro.core.partitioner import sharding_for, worker_mesh
+    from repro.plan import staged_collective_bytes
+    from repro.plan.schemes import ENTRY_BYTES
+
+    from repro.core.expr import MergeFn
+    m, k = 512, 256
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    y = rng.normal(size=(k, k)).astype(np.float32)
+
+    s = Session(block_size=128, mode="dense", n_workers=n_dev)
+    s.load(x, "X")
+    s.load(y, "Y")
+    X = Matrix(s, Leaf("X", (m, k), 1.0))
+    Y = Matrix(s, Leaf("Y", (k, k), 1.0))
+    add = MergeFn("dist_add", lambda a, b: a + b)
+    mul = MergeFn("dist_mul", lambda a, b: a * b)
+    q = (X.t().multiply(X)
+          .select(f"RID>=0 AND RID<={k - 1}")
+          .join(Y, "RID=RID AND CID=CID", add)
+          .join(Y, "RID=RID AND CID=CID", mul)
+          .join(Y, "RID=CID AND CID=RID", add))
+
+    # -- legacy: one jitted program per operator, host sync between -------
+    mesh = s.mesh or worker_mesh(n_dev)
+    row_sh = sharding_for(mesh, costmod.ROW)
+    rep_sh = sharding_for(mesh, costmod.BCAST)
+
+    @jax.jit
+    def gram(xv):
+        xt = jax.lax.with_sharding_constraint(xv.T, row_sh)
+        xr = jax.lax.with_sharding_constraint(xv, rep_sh)
+        return jax.lax.with_sharding_constraint(
+            jnp.dot(xt, xr, preferred_element_type=xv.dtype), row_sh)
+
+    @jax.jit
+    def select_rows(g):
+        return jax.lax.with_sharding_constraint(g[:k, :], row_sh)
+
+    def overlay_fn(merge, transpose):
+        @jax.jit
+        def run(g, yv):
+            g = jax.lax.with_sharding_constraint(g, row_sh)
+            yv = jax.lax.with_sharding_constraint(
+                yv.T if transpose else yv, row_sh)
+            return merge(g, yv)
+        return run
+
+    overlays = [overlay_fn(add.fn, False), overlay_fn(mul.fn, False),
+                overlay_fn(add.fn, True)]
+    xj, yj = jnp.asarray(x), jnp.asarray(y)
+
+    def per_join():
+        g = gram(xj)
+        g.block_until_ready()          # host round-trip between programs
+        g = select_rows(g)
+        g.block_until_ready()
+        for ov in overlays:
+            g.block_until_ready()
+            g = ov(g, yj)
+        return g
+
+    # -- staged: the whole DAG as one GSPMD program -----------------------
+    def spmd():
+        return q.collect().value
+
+    per_join_us = timeit(per_join, repeats=15)
+    spmd_us = timeit(spmd, repeats=15)
+    row(f"dist_comm_n{n_dev}_per_join_jit", per_join_us,
+        "5 programs + 4 host syncs")
+    row(f"dist_comm_n{n_dev}_whole_plan_spmd", spmd_us,
+        f"speedup={per_join_us / max(spmd_us, 1e-9):.2f}x")
+
+    # -- predicted vs measured communication ------------------------------
+    pplan = s.physical_plan(s._optimized(q.plan))
+    predicted = pplan.total_comm_est * ENTRY_BYTES
+    measured = staged_collective_bytes(pplan, s.env, s.mesh)
+    ratio = (measured / predicted) if predicted else float("nan")
+    row(f"dist_comm_n{n_dev}_collective_bytes", None,
+        f"predicted={predicted:.0f}B measured={measured}B "
+        f"ratio={ratio:.2f}")

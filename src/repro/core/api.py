@@ -54,8 +54,38 @@ class Session:
         self.engine = engine
         self.n_workers = n_workers
         self._auto = 0
+        self._mesh = None
         self._plan_cache: Dict[tuple, "planmod.PhysicalPlan"] = {}
         self._opt_cache: Dict[Expr, Expr] = {}
+
+    @property
+    def workers(self) -> int:
+        """Effective worker count (``n_workers`` or every local device)."""
+        import jax
+        return self.n_workers or jax.device_count()
+
+    @property
+    def mesh(self):
+        """The session-owned 1-D worker mesh (None on a single worker).
+
+        Built once per topology and threaded through planning, SPMD
+        execution and EXPLAIN — the single source of device topology for
+        this session. Changing ``n_workers`` rebuilds it, and the plan
+        cache is keyed on it, so a topology change replans and restages.
+        """
+        w = self.workers
+        if w <= 1:
+            return None
+        from repro.core.partitioner import mesh_workers, worker_mesh
+        if self._mesh is None or mesh_workers(self._mesh) != w:
+            self._mesh = worker_mesh(w)
+        return self._mesh
+
+    def _mesh_key(self):
+        m = self.mesh
+        if m is None:
+            return None
+        return (tuple(d.id for d in m.devices.flat), m.axis_names)
 
     def load(self, value, name: Optional[str] = None,
              sparsity: Optional[float] = None) -> "Matrix":
@@ -81,7 +111,8 @@ class Session:
             return exmod.execute(plan, self.env, mode=self.mode,
                                  block_size=self.block_size,
                                  use_bloom=self.use_bloom)
-        return planmod.execute_plan(self.physical_plan(plan), self.env)
+        return planmod.execute_plan(self.physical_plan(plan), self.env,
+                                    mesh=self.mesh)
 
     def _optimized(self, plan: Expr) -> Expr:
         """Logical optimization with a bounded per-session memo, so the
@@ -98,15 +129,18 @@ class Session:
         """Lower ``plan`` (assumed already optimized) into a physical DAG.
 
         Plans are cached per (expr, mode, block_size, use_bloom,
-        n_workers, kernel backend env): logical ``Expr`` trees are frozen
-        and hash structurally, and plan annotations derive from the
+        n_workers, mesh, kernel backend env): logical ``Expr`` trees are
+        frozen and hash structurally, and plan annotations derive from the
         expression plus those settings — so repeated ``collect()`` calls
-        reuse the DAG (and its staged jit function). The cache is bounded:
-        sessions issuing parameter-varying queries evict oldest-first.
+        reuse the DAG (and its staged jit / SPMD function). The mesh is in
+        the key because the staged SPMD program and the scheme annotations
+        are topology-specific. The cache is bounded: sessions issuing
+        parameter-varying queries evict oldest-first.
         """
         import os
         key = (plan, self.mode, self.block_size, self.use_bloom,
-               self.n_workers, os.environ.get("REPRO_KERNEL_BACKEND"))
+               self.n_workers, self._mesh_key(),
+               os.environ.get("REPRO_KERNEL_BACKEND"))
         cached = self._plan_cache.get(key)
         if cached is None:
             cached = planmod.build_plan(
@@ -204,11 +238,22 @@ class Matrix:
         plan = self.optimized_plan().plan if optimize else self.plan
         return self.session.physical_plan(plan)
 
-    def explain(self, physical: bool = False) -> str:
+    def explain(self, physical: bool = False,
+                measure_comm: bool = False) -> str:
         """Logical EXPLAIN (rewrites + costs) or, with ``physical=True``,
-        the physical DAG with per-node cost, strategy, backend, sharding."""
+        the physical DAG with per-node cost, strategy, backend and (on
+        multi-worker sessions) propagated partition schemes + predicted
+        comm. ``measure_comm=True`` additionally compiles the staged SPMD
+        program and prints its HLO-measured collective bytes next to the
+        prediction (dense jit-safe plans on a mesh only)."""
         if physical:
-            return planmod.render(self.physical_plan())
+            plan = self.physical_plan()
+            measured = None
+            if measure_comm:
+                from repro.plan.executor import staged_collective_bytes
+                measured = staged_collective_bytes(
+                    plan, self.session.env, self.session.mesh)
+            return planmod.render(plan, measured_bytes=measured)
         return self.optimized_plan().describe(self.plan)
 
     def collect(self, optimize: bool = True, engine: Optional[str] = None):

@@ -279,17 +279,9 @@ def assign_schemes(pred: JoinPred, size_a: float, size_b: float,
 def scheme_to_spec(scheme: str, worker_axis: str = "data"):
     """Map a paper partitioning scheme onto a JAX PartitionSpec.
 
-    Row → shard dim 0 over the worker axis; Column → shard dim 1;
-    Broadcast → fully replicated. This is the 1:1 hardware adaptation of the
-    paper's RDD partitioners onto GSPMD shardings (DESIGN.md §2).
+    Kept as a thin alias of ``core.partitioner.scheme_spec`` (the single
+    scheme→spec mapping, which also handles order-3/4 layouts) so legacy
+    callers keep working without a second copy of the rule.
     """
-    from jax.sharding import PartitionSpec as P
-    if scheme == ROW:
-        return P(worker_axis, None)
-    if scheme == COL:
-        return P(None, worker_axis)
-    if scheme == BCAST:
-        return P(None, None)
-    if scheme == RANDOM:
-        return P(worker_axis, None)  # arbitrary placement; row-major default
-    raise ValueError(scheme)
+    from repro.core.partitioner import scheme_spec
+    return scheme_spec(scheme, ndim=2, axis=worker_axis)

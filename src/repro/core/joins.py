@@ -416,6 +416,30 @@ def d2v_sparse(a: BlockMatrix, b: BlockMatrix, dim: Field,
                      a.shape + b.shape)
 
 
+def join_distributed(mesh, a: BlockMatrix, b: BlockMatrix, pred: JoinPred,
+                     merge: MergeFn, plan=None):
+    """Distributed entry point: one cost-model-sharded join per call.
+
+    Routes through ``core.partitioner`` (schemes from §4.7, realized as
+    GSPMD sharding constraints on the session mesh). This is the per-join
+    path — a multi-op query pays a host round-trip between joins; the
+    whole-plan SPMD staging in ``repro.plan.executor`` exists precisely to
+    avoid that, and ``benchmarks/bench_dist_comm.py`` measures the gap.
+    """
+    from repro.core import partitioner as partmod
+    k = pred.kind
+    if k in (JoinKind.DIRECT_OVERLAY, JoinKind.TRANSPOSE_OVERLAY):
+        return partmod.distributed_overlay(
+            mesh, a, b, merge, transpose=(k is JoinKind.TRANSPOSE_OVERLAY),
+            plan=plan)
+    if k is JoinKind.D2D:
+        return partmod.distributed_d2d(mesh, a, b, pred.left, pred.right,
+                                       merge, plan=plan)
+    raise NotImplementedError(
+        f"per-call distributed execution not defined for {k}; "
+        "use the whole-plan SPMD path (repro.plan)")
+
+
 def join_sparse(a: BlockMatrix, b: BlockMatrix, pred: JoinPred,
                 merge: MergeFn, use_bloom: bool = True,
                 kernel_backend: Optional[str] = None,

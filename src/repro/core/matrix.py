@@ -44,7 +44,12 @@ class BlockMatrix:
     @property
     def block_mask(self) -> jnp.ndarray:
         if self._mask is None:
-            self._mask = compute_block_mask(self.value, self.block_size)
+            mask = compute_block_mask(self.value, self.block_size)
+            if isinstance(self.value, jax.core.Tracer):
+                # first access under jit/vmap tracing: caching would leak
+                # the tracer into later eager use of this (leaked) instance
+                return mask
+            self._mask = mask
         return self._mask
 
     # -- pytree protocol ----------------------------------------------------

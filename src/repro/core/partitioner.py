@@ -1,16 +1,23 @@
-"""Distributed matrix data partitioner (paper §4.7, "Algorithm for
-Partitioning Scheme Assignment of Joins") mapped onto GSPMD.
+"""Partition-scheme → GSPMD algebra and mesh construction (paper §4.7).
 
-The partitioner picks (s'_A, s'_B) ∈ {Row, Column, Broadcast}² minimizing
-``C_comm(join) + C_vt(A) + C_vt(B)`` via grid search over the paper's cost
-tables, then realizes the schemes as JAX shardings on a 1-D worker mesh.
-The resulting resharding + join lowers to real collectives, which the
-benchmarks parse back out of HLO to validate the cost model (Fig. 11c).
+Since plan-wide scheme propagation landed (``repro.plan.schemes``), this
+module is the thin hardware-adaptation layer: it owns the worker mesh, the
+scheme → ``PartitionSpec`` mapping (including the transpose rule and the
+order-3/4 leading-dim generalization), and the per-join §4.7 assignment
+(``plan_join_static``) the planner annotates joins with. The per-call
+distributed entry points (``distributed_overlay`` / ``distributed_d2d``)
+remain as the legacy one-join-per-jit path — the baseline the whole-plan
+SPMD executor is benchmarked against (``benchmarks/bench_dist_comm.py``).
+
+Meshes are session-owned: ``repro.core.api.Session`` builds one
+``worker_mesh`` per session and threads it through planning, execution and
+EXPLAIN, so every component agrees on the device topology instead of
+rebuilding it per call.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,8 +33,48 @@ WORKER_AXIS = "workers"
 
 
 def worker_mesh(n: Optional[int] = None) -> Mesh:
-    devs = np.array(jax.devices()[: n or len(jax.devices())])
-    return Mesh(devs, (WORKER_AXIS,))
+    """1-D mesh over the first ``n`` local devices (all by default).
+
+    Requesting more workers than visible devices raises: silently
+    clamping would leave plans annotated (and comm predictions scaled)
+    for a topology that isn't there.
+    """
+    devs = jax.devices()
+    if n is not None and n > len(devs):
+        raise ValueError(
+            f"requested {n} workers but only {len(devs)} device(s) are "
+            f"visible; on CPU set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={n}")
+    return Mesh(np.array(devs[: n or len(devs)]), (WORKER_AXIS,))
+
+
+def mesh_workers(mesh: Mesh) -> int:
+    """Worker count of a mesh — the single place this is derived."""
+    return int(np.prod(mesh.devices.shape))
+
+
+def scheme_spec(scheme: str, ndim: int = 2,
+                axis: str = WORKER_AXIS) -> P:
+    """Map a paper partitioning scheme onto a ``PartitionSpec``.
+
+    Row → shard dim 0; Column → shard dim 1; Broadcast → replicated; ξ
+    (random) → row-major default placement. Order-3/4 join outputs shard
+    the leading dimension (the §5.1 D1-first layout), so Row generalizes
+    to dim 0 at any rank and Column only exists for matrices.
+    """
+    if scheme in (costmod.ROW, costmod.RANDOM):
+        return P(axis, *([None] * (ndim - 1)))
+    if scheme == costmod.COL:
+        if ndim != 2:
+            raise ValueError(f"column scheme undefined at ndim={ndim}")
+        return P(None, axis)
+    if scheme == costmod.BCAST:
+        return P(*([None] * ndim))
+    raise ValueError(scheme)
+
+
+def sharding_for(mesh: Mesh, scheme: str, ndim: int = 2) -> NamedSharding:
+    return NamedSharding(mesh, scheme_spec(scheme, ndim, mesh.axis_names[0]))
 
 
 @dataclasses.dataclass
@@ -60,8 +107,8 @@ def plan_join_static(pred: JoinPred, size_a: float, size_b: float,
         eta_a=eta_a, eta_b=eta_b)
     return DistributedJoinPlan(
         choice,
-        costmod.scheme_to_spec(choice.scheme_a, WORKER_AXIS),
-        costmod.scheme_to_spec(choice.scheme_b, WORKER_AXIS),
+        scheme_spec(choice.scheme_a),
+        scheme_spec(choice.scheme_b),
         n_workers,
     )
 
@@ -76,48 +123,40 @@ def plan_join(pred: JoinPred, a: BlockMatrix, b: BlockMatrix,
                             eta_a=eta_a, eta_b=eta_b)
 
 
-def _local_overlay(f: Callable, transpose: bool):
-    def body(a_blk, b_blk):
-        return f(a_blk, b_blk)
-
-    return body
-
-
 def distributed_overlay(mesh: Mesh, a: BlockMatrix, b: BlockMatrix,
                         merge: MergeFn, transpose: bool = False,
                         plan: Optional[DistributedJoinPlan] = None,
                         ) -> Tuple[jnp.ndarray, DistributedJoinPlan]:
-    """Distributed two-dimension join (§4.3) under cost-model shardings.
+    """Per-call distributed two-dimension join (§4.3).
 
-    The input matrices are constrained to the chosen schemes; XLA inserts the
-    resharding collectives, i.e. the communication the cost model predicts.
+    The input matrices are constrained to the chosen schemes; XLA inserts
+    the resharding collectives, i.e. the communication the cost model
+    predicts. One jit per call — the whole-plan SPMD path
+    (``repro.plan.executor``) supersedes this for multi-op queries.
     """
+    from repro.plan.schemes import transpose_scheme
     pred = JoinPred(JoinKind.TRANSPOSE_OVERLAY if transpose
                     else JoinKind.DIRECT_OVERLAY)
-    n = int(np.prod(mesh.devices.shape))
-    plan = plan or plan_join(pred, a, b, n)
+    plan = plan or plan_join(pred, a, b, mesh_workers(mesh))
 
     bv = b.value.T if transpose else b.value
-    spec_b = plan.spec_b
-    if transpose:
-        # the scheme was chosen for B; after the transpose, row and column
-        # shardings swap (the planner's transpose-overlay table accounts for
-        # the movement; here we materialize Bᵀ in the matching layout)
-        swap = {("workers", None): P(None, "workers"),
-                (None, "workers"): P("workers", None)}
-        spec_b = swap.get(tuple(spec_b), spec_b)
+    # the §4.7 scheme was chosen for B; we materialize Bᵀ, whose scheme is
+    # the transpose-rule image of B's (row/column shardings swap)
+    scheme_b = transpose_scheme(plan.choice.scheme_b) if transpose \
+        else plan.choice.scheme_b
+    spec_a, spec_b = plan.spec_a, scheme_spec(scheme_b)
 
     @jax.jit
     def run(av, bvv):
         av = jax.lax.with_sharding_constraint(
-            av, NamedSharding(mesh, plan.spec_a))
+            av, NamedSharding(mesh, spec_a))
         bvv = jax.lax.with_sharding_constraint(
             bvv, NamedSharding(mesh, spec_b))
         # align B to A's sharding for the local merge (GSPMD emits the
         # minimal collective to satisfy this, mirroring "repartition the
         # smaller matrix with the larger one's scheme")
         bvv = jax.lax.with_sharding_constraint(
-            bvv, NamedSharding(mesh, plan.spec_a))
+            bvv, NamedSharding(mesh, spec_a))
         return merge.fn(av, bvv)
 
     return run(a.value, bv), plan
@@ -127,32 +166,69 @@ def distributed_d2d(mesh: Mesh, a: BlockMatrix, b: BlockMatrix,
                     left: Field, right: Field, merge: MergeFn,
                     plan: Optional[DistributedJoinPlan] = None,
                     ) -> Tuple[jnp.ndarray, DistributedJoinPlan]:
-    """Distributed single-dimension join (§4.4): the matched dimension is
-    sharded across workers; each worker emits its slice of the order-3
-    output (D1-leading layout)."""
+    """Per-call distributed single-dimension join (§4.4): the matched
+    dimension is sharded across workers; each worker emits its slice of
+    the order-3 output (D1-leading layout)."""
     pred = JoinPred(JoinKind.D2D, left, right)
-    n = int(np.prod(mesh.devices.shape))
-    plan = plan or plan_join(pred, a, b, n)
+    plan = plan or plan_join(pred, a, b, mesh_workers(mesh))
 
     av = a.value if left is Field.RID else a.value.T
     bv = b.value if right is Field.RID else b.value.T
+    row = sharding_for(mesh, costmod.ROW)
 
     @jax.jit
     def run(aa, bb):
-        aa = jax.lax.with_sharding_constraint(
-            aa, NamedSharding(mesh, P(WORKER_AXIS, None)))
-        bb = jax.lax.with_sharding_constraint(
-            bb, NamedSharding(mesh, P(WORKER_AXIS, None)))
+        aa = jax.lax.with_sharding_constraint(aa, row)
+        bb = jax.lax.with_sharding_constraint(bb, row)
         return merge.fn(aa[:, :, None], bb[:, None, :])
 
     return run(av, bv), plan
 
 
+def _lower(fn, *args):
+    """Lower ``fn`` — reusing its own jit cache when already jitted
+    (wrapping a jitted fn in a fresh ``jax.jit`` would recompile the
+    whole program on every measurement call)."""
+    if not hasattr(fn, "lower"):
+        fn = jax.jit(fn)
+    return fn.lower(*args)
+
+
 def measured_collective_bytes(fn, *args) -> int:
     """Lower ``fn(*args)`` and report collective bytes from optimized HLO —
-    used by benchmarks to validate the paper's cost model against XLA."""
+    used by benchmarks and EXPLAIN to validate the paper's cost model
+    against what XLA actually emits."""
     from repro.analysis.hlo import parse_hlo_module
-    lowered = jax.jit(fn).lower(*args)
-    compiled = lowered.compile()
-    stats = parse_hlo_module(compiled.as_text())
+    stats = parse_hlo_module(_lower(fn, *args).compile().as_text())
     return int(stats.collective_bytes)
+
+
+# Per-device HLO operand bytes → network-wide wire bytes, per collective
+# family. The parsed module is ONE device's SPMD program and the operand of
+# e.g. an all-gather is only the local shard, while the paper's cost model
+# counts total entries moved across the network; these factors reconcile
+# the two conventions (ring/bidirectional algorithms assumed, the XLA CPU/
+# TPU default). Validated against the cost model: an all-to-all reshard of
+# a c-partitioned 512² matrix to r measures exactly (N-1)/N·|B| wire bytes.
+_FLEET_SCALE = {
+    "all-to-all": lambda n: n - 1,          # each shard sent to N-1 peers,
+    "collective-permute": lambda n: n,      # 1/N kept locally
+    "all-gather": lambda n: n * (n - 1),    # every shard to every peer
+    "collective-broadcast": lambda n: n - 1,
+    "reduce-scatter": lambda n: n - 1,
+    "all-reduce": lambda n: 2 * (n - 1),    # ring: reduce-scatter + gather
+}
+
+
+def measured_network_bytes(fn, *args, n_workers: int) -> int:
+    """Network-wide collective wire bytes of ``fn`` — the quantity the
+    paper's cost model predicts (entries moved × dtype bytes). Parses the
+    per-device optimized HLO and scales each collective family to fleet
+    wire traffic (see ``_FLEET_SCALE``)."""
+    from repro.analysis.hlo import parse_hlo_module
+    stats = parse_hlo_module(_lower(fn, *args).compile().as_text())
+    total = 0.0
+    for op, b in stats.collective_breakdown.items():
+        scale = _FLEET_SCALE.get(op, lambda n: n - 1)
+        total += b * scale(n_workers)
+    return int(total)

@@ -14,11 +14,15 @@ with memoization (jit-staging the whole plan on the dense tier); ``render``
 is the physical EXPLAIN.
 """
 from repro.plan.builder import build_plan
-from repro.plan.executor import PlanExecutor, execute_plan
+from repro.plan.executor import (
+    PlanExecutor, execute_plan, staged_collective_bytes,
+)
 from repro.plan.explain import render
 from repro.plan.ops import PhysicalNode, PhysicalPlan
+from repro.plan.schemes import SchemeAssignment, propagate, transpose_scheme
 
 __all__ = [
     "build_plan", "execute_plan", "PlanExecutor", "PhysicalNode",
-    "PhysicalPlan", "render",
+    "PhysicalPlan", "render", "staged_collective_bytes",
+    "SchemeAssignment", "propagate", "transpose_scheme",
 ]

@@ -185,6 +185,13 @@ def build_plan(e: Expr, *, mode: str = "sparse", block_size: int = 256,
         n_workers = jax.device_count()
     b = _Builder(mode, block_size, use_bloom, kernel_backend, n_workers)
     root = b.lower(e)
-    return P.PhysicalPlan(
+    plan = P.PhysicalPlan(
         nodes=tuple(b.nodes), root=root, mode=mode, block_size=block_size,
         n_workers=n_workers, logical_nodes=count_nodes(e))
+    if n_workers > 1:
+        # plan-wide scheme propagation: every node gets an output scheme
+        # chosen knowing its consumers, so op boundaries compose without
+        # resharding wherever the cost model says they can
+        from repro.plan import schemes as schemesmod
+        schemesmod.annotate(plan)
+    return plan

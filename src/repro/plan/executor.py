@@ -15,10 +15,18 @@ Two paths:
   for ``mode="dense"``, the whole DAG is staged into one ``jax.jit``-ed
   function over the leaf arrays (compiled once per plan, cached on the
   ``PhysicalPlan``), letting XLA fuse across operators.
+
+The staged path has an **SPMD variant**: given a worker mesh (session-owned,
+``Session.mesh``) and a multi-worker plan, node outputs are pinned to the
+schemes chosen by the plan-wide propagation pass (``repro.plan.schemes``)
+via ``with_sharding_constraint`` — one GSPMD program for the whole plan, so
+consecutive operators hand off partitioned data without host round-trips,
+and the collectives XLA inserts are exactly the reshards the cost model
+predicted (validated by ``measured_collective_bytes``).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple, Union
+from typing import Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -39,20 +47,28 @@ Result = Union[BlockMatrix, COOTensor]
 
 
 class PlanExecutor:
-    """Memoized topological evaluator for ``PhysicalPlan``s."""
+    """Memoized topological evaluator for ``PhysicalPlan``s.
 
-    def __init__(self, env: Dict[str, BlockMatrix], stage_jit: bool = True):
+    ``mesh`` (session-owned) selects the SPMD staged path for jit-safe
+    multi-worker dense plans: the whole DAG compiles to one GSPMD program
+    with node outputs constrained to their propagated schemes.
+    """
+
+    def __init__(self, env: Dict[str, BlockMatrix], stage_jit: bool = True,
+                 mesh=None):
         self.env = env
         self.stage_jit = stage_jit
+        self.mesh = mesh
         self.stats: Dict[str, int] = {
             "node_evals": 0, "matmuls": 0, "masked_matmuls": 0, "joins": 0,
-            "staged": 0,
+            "staged": 0, "staged_spmd": 0,
         }
 
     # -- public ---------------------------------------------------------------
     def run(self, plan: P.PhysicalPlan) -> Result:
         if plan.mode == "dense" and self.stage_jit and plan.jit_safe:
-            return self._run_staged(plan)
+            spmd = self.mesh is not None and plan.n_workers > 1
+            return self._run_staged(plan, self.mesh if spmd else None)
         return self._run_eager(plan)
 
     # -- eager path -----------------------------------------------------------
@@ -138,33 +154,52 @@ class PlanExecutor:
             kernel_backend=node.backend, strategy=node.strategy)
 
     # -- jit-staged dense path ------------------------------------------------
-    def _run_staged(self, plan: P.PhysicalPlan) -> Result:
-        staged = plan._staged_fn
+    def _run_staged(self, plan: P.PhysicalPlan, mesh=None) -> Result:
+        staged = plan._staged_spmd_fn if mesh is not None \
+            else plan._staged_fn
         if staged is None:
-            staged = _stage(plan)
-            plan._staged_fn = staged
+            staged = _stage(plan, mesh)
+            if mesh is not None:
+                plan._staged_spmd_fn = staged
+            else:
+                plan._staged_fn = staged
         fn, leaf_names = staged
         for name in leaf_names:
             if name not in self.env:
                 raise KeyError(f"unbound matrix {name!r}")
         leaf_vals = tuple(self.env[name].value for name in leaf_names)
-        self.stats["staged"] += 1
+        self.stats["staged_spmd" if mesh is not None else "staged"] += 1
         self.stats["node_evals"] += plan.n_nodes
         out = fn(*leaf_vals)
         return dense_join_result(out, plan.block_size)
 
 
-def _stage(plan: P.PhysicalPlan):
+def _stage(plan: P.PhysicalPlan, mesh=None):
     """Compile the whole DAG into one jit-ed function of the leaf arrays.
 
     Synthesized ``ones(...)`` leaves are constants and materialize inside
     the trace; only catalog leaves become function arguments (so shape
     changes in the session environment simply retrace).
+
+    With ``mesh``, every node output is pinned to its propagated scheme
+    (``node.scheme``) via ``with_sharding_constraint`` — the whole plan
+    becomes one GSPMD program and XLA inserts exactly the reshards the
+    scheme pass accounted for.
     """
     env_leaves = [n for n in plan.nodes
                   if n.kind == P.LEAF and not n.expr.name.startswith("ones(")]
     leaf_names = tuple(n.expr.name for n in env_leaves)
     arg_index = {n.op_id: i for i, n in enumerate(env_leaves)}
+
+    constraint = None
+    if mesh is not None:
+        from repro.core.partitioner import sharding_for
+
+        def constraint(node, v):
+            if node.scheme is None:
+                return v
+            return jax.lax.with_sharding_constraint(
+                v, sharding_for(mesh, node.scheme, v.ndim))
 
     def fn(*leaf_vals):
         vals: Dict[int, jnp.ndarray] = {}
@@ -196,6 +231,8 @@ def _stage(plan: P.PhysicalPlan):
                 v = joinsmod.join_dense(ch[0], ch[1], e.pred, e.merge)
             else:
                 raise TypeError(f"node kind {k!r} is not jit-stageable")
+            if constraint is not None:
+                v = constraint(node, v)
             vals[node.op_id] = v
         return vals[plan.root]
 
@@ -203,5 +240,23 @@ def _stage(plan: P.PhysicalPlan):
 
 
 def execute_plan(plan: P.PhysicalPlan, env: Dict[str, BlockMatrix],
-                 stage_jit: bool = True) -> Result:
-    return PlanExecutor(env, stage_jit=stage_jit).run(plan)
+                 stage_jit: bool = True, mesh=None) -> Result:
+    return PlanExecutor(env, stage_jit=stage_jit, mesh=mesh).run(plan)
+
+
+def staged_collective_bytes(plan: P.PhysicalPlan,
+                            env: Dict[str, BlockMatrix],
+                            mesh) -> Optional[int]:
+    """HLO-measured network-wide collective bytes of the whole-plan SPMD
+    program, for validating the scheme pass's ``total_comm_est`` (same
+    unit: entries moved × dtype bytes). ``None`` when the plan cannot
+    stage (non-jit-safe or sparse tier)."""
+    if plan.mode != "dense" or not plan.jit_safe or mesh is None:
+        return None
+    from repro.core.partitioner import measured_network_bytes
+    if plan._staged_spmd_fn is None:
+        plan._staged_spmd_fn = _stage(plan, mesh)
+    fn, leaf_names = plan._staged_spmd_fn
+    leaf_vals = tuple(env[name].value for name in leaf_names)
+    return measured_network_bytes(fn, *leaf_vals,
+                                  n_workers=plan.n_workers)

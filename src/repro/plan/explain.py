@@ -2,15 +2,23 @@
 
 The output is the EXPLAIN surface for plan decisions — what the paper's
 optimizer chooses (join strategy, partition schemes) plus what this
-reproduction adds (kernel backend, CSE sharing). Shared nodes print once
-with their full annotation; later references render as ``(shared)`` so the
-DAG structure is visible in the tree layout.
+reproduction adds (kernel backend, CSE sharing, plan-wide SPMD schemes).
+Shared nodes print once with their full annotation; later references
+render as ``(shared)`` so the DAG structure is visible in the tree layout.
+
+On multi-worker plans each node shows its propagated output scheme, the
+schemes it consumes its children in, and the predicted entries moved at
+its boundary (``scheme=r←(r,b) comm=…``); the header totals them. Pass
+``measured_bytes`` (from ``plan.executor.staged_collective_bytes``) to
+print the HLO-measured collectives next to the prediction — the
+end-to-end validation of the paper's cost model.
 """
 from __future__ import annotations
 
-from typing import List, Set
+from typing import List, Optional, Set
 
 from repro.plan.ops import PhysicalNode, PhysicalPlan
+from repro.plan.schemes import ENTRY_BYTES
 
 
 def _annotations(n: PhysicalNode) -> str:
@@ -25,15 +33,27 @@ def _annotations(n: PhysicalNode) -> str:
         parts.append(
             f"schemes=({n.partition.scheme_a},{n.partition.scheme_b})"
             f" comm={n.partition.total:.3g}")
+    if n.scheme is not None:
+        ins = ",".join(n.in_schemes)
+        parts.append(f"scheme={n.scheme}" + (f"←({ins})" if ins else "")
+                     + f" moved={n.comm_est:.3g}")
     return ("  [" + " ".join(parts) + "]") if parts else ""
 
 
-def render(plan: PhysicalPlan) -> str:
+def render(plan: PhysicalPlan,
+           measured_bytes: Optional[int] = None) -> str:
     header = (f"== physical plan: mode={plan.mode} workers={plan.n_workers}"
               f" | {plan.n_nodes} ops from {plan.logical_nodes} logical"
               f" nodes ({plan.shared_nodes} shared)"
               f" | est {plan.est_flops:.4g} flops ==")
     lines = [header]
+    if plan.total_comm_est:
+        comm = (f"== comm: predicted {plan.total_comm_est:.4g}"
+                f" entries moved"
+                f" (~{plan.total_comm_est * ENTRY_BYTES:.4g} B)")
+        if measured_bytes is not None:
+            comm += f" | measured {measured_bytes} collective bytes"
+        lines.append(comm + " ==")
     seen: Set[int] = set()
 
     def walk(op_id: int, indent: int) -> None:

@@ -63,6 +63,10 @@ class PhysicalNode:
     partition: Optional[PartitionChoice] = None
     jit_safe: bool = True
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # plan-wide SPMD annotations (repro.plan.schemes, multi-worker plans):
+    scheme: Optional[str] = None          # output partitioning scheme
+    in_schemes: Tuple[str, ...] = ()      # scheme each child is consumed in
+    comm_est: float = 0.0                 # predicted entries moved here
 
     def label(self) -> str:
         if self.kind == MASKED_ELEMWISE:
@@ -80,9 +84,13 @@ class PhysicalPlan:
     block_size: int
     n_workers: int
     logical_nodes: int                 # node count of the source Expr tree
+    total_comm_est: float = 0.0        # predicted entries moved, whole plan
 
-    # staged-execution cache, populated lazily by the DAG executor
+    # staged-execution caches, populated lazily by the DAG executor
+    # (one per path: plain jit, SPMD jit over the session mesh)
     _staged_fn: Optional[Any] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _staged_spmd_fn: Optional[Any] = dataclasses.field(
         default=None, repr=False, compare=False)
 
     @property

@@ -1,0 +1,60 @@
+"""BlockMatrix storage invariants — the lazy mask cache under tracing.
+
+Regression for the cache-poisoning bug: ``block_mask`` assigned ``_mask``
+on first access, so a first access inside ``jit``/``vmap`` cached a tracer
+on the instance; if that instance outlived the trace (captured by any
+Python-side structure), later eager access returned a leaked tracer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.matrix import BlockMatrix, compute_block_mask
+
+
+def test_block_mask_eager_access_caches():
+    bm = BlockMatrix.from_dense(jnp.eye(16), 8)
+    m = bm.block_mask
+    assert bm._mask is not None
+    assert m is bm.block_mask  # second access hits the cache
+
+
+def test_block_mask_not_cached_under_tracing():
+    captured = []
+
+    def f(v):
+        bm = BlockMatrix(v, None, 8)
+        captured.append(bm)
+        return bm.block_mask.astype(jnp.float32).sum()
+
+    out = jax.jit(f)(jnp.eye(16))
+    assert float(out) == 2.0  # only the two diagonal blocks are live
+    # the instance created under the trace must not retain a tracer
+    assert captured[0]._mask is None
+    assert isinstance(captured[0].value, jax.core.Tracer)
+
+
+def test_block_mask_correct_inside_and_outside_jit():
+    v = jnp.zeros((16, 16)).at[0, 0].set(1.0)
+
+    def nnz_blocks(arr):
+        return BlockMatrix(arr, None, 8).block_mask.sum()
+
+    eager = BlockMatrix.from_dense(v, 8).block_mask
+    jitted = jax.jit(lambda a: BlockMatrix(a, None, 8).block_mask)(v)
+    np.testing.assert_array_equal(np.asarray(eager), np.asarray(jitted))
+    assert int(jax.jit(nnz_blocks)(v)) == 1
+
+
+def test_block_mask_vmap_first_then_eager():
+    """First access under vmap tracing, then eager use of a *fresh* mask
+    computation on the same values — must agree and stay concrete."""
+    vals = jnp.stack([jnp.eye(16), jnp.zeros((16, 16))])
+
+    def f(v):
+        return BlockMatrix(v, None, 8).block_mask
+
+    batched = jax.vmap(f)(vals)
+    assert batched.shape == (2, 2, 2)
+    single = compute_block_mask(vals[0], 8)
+    np.testing.assert_array_equal(np.asarray(batched[0]),
+                                  np.asarray(single))

@@ -1,0 +1,149 @@
+"""Partitioner algebra: transpose rule, spec mapping, §4.7 golden choices.
+
+The golden table pins ``plan_join_static``'s scheme pair for every join
+family at n_workers ∈ {2, 4, 8} against the paper's cost model evaluated
+by hand — previously untested behavior the planner relies on.
+"""
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import cost as C
+from repro.core.partitioner import (
+    WORKER_AXIS, plan_join_static, scheme_spec,
+)
+from repro.core.predicates import parse_join
+from repro.plan.schemes import transpose_scheme
+
+# Both sides above BROADCAST_LIMIT so the grid search never broadcasts —
+# the interesting regime where scheme choice actually matters.
+BIG_A, BIG_B = 1e7, 8e6
+# One tiny side: broadcasting it is free communication.
+TINY = 1e3
+
+
+# ---------------------------------------------------------------------------
+# Scheme algebra (replaces the old ad-hoc PartitionSpec swap dict).
+# ---------------------------------------------------------------------------
+
+def test_transpose_scheme_rule():
+    assert transpose_scheme(C.ROW) == C.COL
+    assert transpose_scheme(C.COL) == C.ROW
+    assert transpose_scheme(C.BCAST) == C.BCAST
+    assert transpose_scheme(C.RANDOM) == C.RANDOM
+
+
+def test_transpose_rule_matches_spec_swap():
+    """The algebraic rule reproduces the swap the overlay path used to
+    hardcode: row spec ↔ column spec, replicated fixed."""
+    swap = {P(WORKER_AXIS, None): P(None, WORKER_AXIS),
+            P(None, WORKER_AXIS): P(WORKER_AXIS, None),
+            P(None, None): P(None, None)}
+    for s in (C.ROW, C.COL, C.BCAST):
+        assert scheme_spec(transpose_scheme(s)) == swap[scheme_spec(s)]
+
+
+def test_worker_mesh_rejects_oversubscription():
+    """Requesting more workers than devices must fail loudly, not clamp —
+    a clamped mesh would execute plans annotated for a larger topology."""
+    import jax
+
+    from repro.core.partitioner import worker_mesh
+    with pytest.raises(ValueError, match="visible"):
+        worker_mesh(jax.device_count() + 1)
+
+
+def test_scheme_spec_ranks():
+    assert scheme_spec(C.ROW) == P(WORKER_AXIS, None)
+    assert scheme_spec(C.COL) == P(None, WORKER_AXIS)
+    assert scheme_spec(C.BCAST) == P(None, None)
+    assert scheme_spec(C.RANDOM) == P(WORKER_AXIS, None)
+    # order-3/4 join outputs shard the leading dim (§5.1 D1-first layout)
+    assert scheme_spec(C.ROW, ndim=3) == P(WORKER_AXIS, None, None)
+    assert scheme_spec(C.BCAST, ndim=4) == P(None, None, None, None)
+    with pytest.raises(ValueError):
+        scheme_spec(C.COL, ndim=3)
+
+
+# ---------------------------------------------------------------------------
+# Golden table: plan_join_static over the four join families × n_workers.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [2, 4, 8])
+def test_golden_direct_overlay(n):
+    # any matched pair is comm-free; conversions from ξ tie at |A|+|B|, and
+    # the grid search scans Row first → (r, r) with zero join comm
+    plan = plan_join_static(parse_join("RID=RID AND CID=CID"),
+                            BIG_A, BIG_B, n)
+    c = plan.choice
+    assert (c.scheme_a, c.scheme_b) == (C.ROW, C.ROW)
+    assert c.comm_cost == 0.0
+    assert c.conversion_cost == BIG_A + BIG_B
+    assert plan.spec_a == P(WORKER_AXIS, None)
+
+
+@pytest.mark.parametrize("n", [2, 4, 8])
+def test_golden_transpose_overlay(n):
+    # matching schemes pay (n-1)/n·min (the transposed side lands on the
+    # wrong axis); the free pair is (r, c)
+    plan = plan_join_static(parse_join("RID=CID AND CID=RID"),
+                            BIG_A, BIG_B, n)
+    c = plan.choice
+    assert (c.scheme_a, c.scheme_b) == (C.ROW, C.COL)
+    assert c.comm_cost == 0.0
+    mismatched = C.join_comm_cost(parse_join("RID=CID AND CID=RID"),
+                                  C.ROW, C.ROW, BIG_A, BIG_B, n)
+    assert mismatched == pytest.approx((n - 1) / n * BIG_B)
+
+
+@pytest.mark.parametrize("n", [2, 4, 8])
+@pytest.mark.parametrize("gamma,want", [
+    ("RID=RID", (C.ROW, C.ROW)),
+    ("RID=CID", (C.ROW, C.COL)),
+    ("CID=RID", (C.COL, C.ROW)),
+    ("CID=CID", (C.COL, C.COL)),
+])
+def test_golden_d2d_aligns_with_predicate(n, gamma, want):
+    # Table 1 diagonal: schemes matching the joined dimensions are free
+    plan = plan_join_static(parse_join(gamma), BIG_A, BIG_B, n)
+    c = plan.choice
+    assert (c.scheme_a, c.scheme_b) == want
+    assert c.comm_cost == 0.0
+    assert c.total == BIG_A + BIG_B  # just the ξ→scheme conversions
+
+
+@pytest.mark.parametrize("n", [2, 4, 8])
+def test_golden_v2v_large_sides(n):
+    # entry join: every non-broadcast pair costs (n-1)·min; with both
+    # sides too big to broadcast the model keeps (r, r) and eats it
+    plan = plan_join_static(parse_join("VAL=VAL"), BIG_A, BIG_B, n)
+    c = plan.choice
+    assert (c.scheme_a, c.scheme_b) == (C.ROW, C.ROW)
+    assert c.comm_cost == pytest.approx((n - 1) * BIG_B)
+    assert c.total == pytest.approx(BIG_A + BIG_B + (n - 1) * BIG_B)
+
+
+@pytest.mark.parametrize("n", [2, 4, 8])
+def test_golden_v2v_tiny_side(n):
+    # from a ξ start, broadcasting the tiny side *ties* with (r, r):
+    # ξ→b = n·|B| = |B| + (n-1)·|B| (conversion + comm of the row pair) —
+    # the grid keeps the first minimum, so (r, r) wins the tie
+    plan = plan_join_static(parse_join("VAL=VAL"), BIG_A, TINY, n)
+    c = plan.choice
+    assert (c.scheme_a, c.scheme_b) == (C.ROW, C.ROW)
+    assert c.total == pytest.approx(BIG_A + n * TINY)
+    # an *already broadcast* tiny side stays broadcast: zero total
+    plan = plan_join_static(parse_join("VAL=VAL"), BIG_A, TINY, n,
+                            s_a=C.ROW, s_b=C.BCAST)
+    c = plan.choice
+    assert c.scheme_b == C.BCAST
+    assert c.comm_cost == 0.0 and c.total == 0.0
+
+
+@pytest.mark.parametrize("n", [2, 4, 8])
+def test_golden_preserves_existing_schemes(n):
+    # already-aligned inputs convert nothing: s_a=r, s_b=r on RID=RID
+    plan = plan_join_static(parse_join("RID=RID"), BIG_A, BIG_B, n,
+                            s_a=C.ROW, s_b=C.ROW)
+    c = plan.choice
+    assert (c.scheme_a, c.scheme_b) == (C.ROW, C.ROW)
+    assert c.total == 0.0

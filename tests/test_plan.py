@@ -245,9 +245,10 @@ def test_explain_physical_golden_bloom_join_with_schemes():
                             kernel_backend="dense"))
     expected = textwrap.dedent("""\
         == physical plan: mode=sparse workers=4 | 3 ops from 3 logical nodes (0 shared) | est 1.718e+10 flops ==
-        #2 Join[VAL=VAL, f=mul]  shape=(512, 512, 512, 512) sp=0.025 cost=1.718e+10  [strategy=bloom-sortmerge kernel=bloom_probe backend=dense schemes=(r,r) comm=6.55e+05]
-          #0 Leaf[A]  shape=(512, 512) sp=0.5 cost=0
-          #1 Leaf[B]  shape=(512, 512) sp=0.5 cost=0""")
+        == comm: predicted 3.932e+05 entries moved (~1.573e+06 B) ==
+        #2 Join[VAL=VAL, f=mul]  shape=(512, 512, 512, 512) sp=0.025 cost=1.718e+10  [strategy=bloom-sortmerge kernel=bloom_probe backend=dense schemes=(r,r) comm=6.55e+05 scheme=r←(r,r) moved=3.93e+05]
+          #0 Leaf[A]  shape=(512, 512) sp=0.5 cost=0  [scheme=r moved=0]
+          #1 Leaf[B]  shape=(512, 512) sp=0.5 cost=0  [scheme=r moved=0]""")
     assert got == expected
 
 
