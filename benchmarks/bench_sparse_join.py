@@ -1,0 +1,134 @@
+"""Host-COO vs device-resident sparse joins (beyond paper; PR 4).
+
+Measures the tentpole of the device-resident sparse tier: the same COO
+join (identical entry sets, identical results) executed by
+
+* **host** — ``core.joins`` numpy machinery (``d2d_sparse``'s per-key
+  expansion loop, ``v2v_sparse``'s numpy Bloom + sort-merge), the
+  engine="tree" oracle; one device→host→device round-trip per join;
+* **device** — ``core.joins_device`` jitted segment-expansion over
+  static-capacity buffers (capacities sized exactly as the mask pass
+  would), the code the whole-plan staged executor traces.
+
+Grid: V2V and D2D at 1% / 5% / 20% density. D2D drops to n=512 at 20%
+(its exact expansion count exceeds the device capacity limit at n=1024 —
+the same bound that makes the planner fall back to the host there, see
+``docs/sparse.md``). V2V values are quantized so the match count stays
+around ~2M entries across densities. An overlay row reports the staged
+executor's block-skip ratio on a block-sparse input.
+"""
+import functools
+
+import jax
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core import MergeFn, Session
+from repro.core import joins as joinsmod
+from repro.core import joins_device as jdev
+from repro.core.matrix import BlockMatrix
+from repro.core.predicates import parse_join
+from repro.core.sparsity import analyze_merge
+
+MUL = MergeFn("bench_mul", lambda x, y: x * y)
+BS = 256
+
+
+def _sparse(rng, n, density):
+    v = rng.normal(size=(n, n)).astype(np.float32)
+    return np.where(rng.uniform(size=(n, n)) < density, v, 0) \
+        .astype(np.float32)
+
+
+def _quantized(rng, n, density, domain):
+    """Sparse matrix with values in 1..domain: V2V needs value collisions."""
+    v = rng.integers(1, domain + 1, size=(n, n)).astype(np.float32)
+    return np.where(rng.uniform(size=(n, n)) < density, v, 0) \
+        .astype(np.float32)
+
+
+def _bm(a):
+    return BlockMatrix.from_dense(a, BS)
+
+
+def _bench_pair(name, host_fn, device_fn, nnz, pairs=5):
+    """Interleave host/device samples: this container's throughput drifts
+    over tens of seconds (shared host, cpu-shares throttling), so the
+    honest speedup is the median of per-pair ratios measured back to
+    back, not the ratio of two medians taken minutes apart."""
+    import time
+
+    jax.block_until_ready(device_fn())   # compile
+    host_fn()                            # allocator warmup
+    jax.block_until_ready(device_fn())
+    hs, ds = [], []
+    for _ in range(pairs):
+        t0 = time.perf_counter()
+        host_fn()
+        hs.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(device_fn())
+        ds.append(time.perf_counter() - t0)
+    ratio = float(np.median([h / d for h, d in zip(hs, ds)]))
+    row(f"{name}_host", float(np.median(hs)) * 1e6, f"nnz={nnz}")
+    row(f"{name}_device", float(np.median(ds)) * 1e6,
+        f"speedup={ratio:.2f}x")
+
+
+def run(rng) -> None:
+    prof = analyze_merge(MUL)
+
+    # -- D2D (coo-group-join): the host per-key loop vs segment expansion --
+    for n, density in ((1024, 0.01), (1024, 0.05), (512, 0.20)):
+        a, b = _sparse(rng, n, density), _sparse(rng, n, density)
+        A, B = _bm(a), _bm(b)
+        pred = parse_join("RID=RID")
+        cap = jdev.round_capacity(jdev.exact_capacity(a, b, pred, prof))
+        side = lambda m: jdev.round_capacity(np.count_nonzero(m))
+        fn = jax.jit(functools.partial(
+            jdev.d2d_device, left=pred.left, right=pred.right,
+            merge=MUL.fn, prof=prof, cap=cap, cap_a=side(a),
+            cap_b=side(b)))
+        aj, bj = A.value, B.value
+        out = joinsmod.d2d_sparse(A, B, pred.left, pred.right, MUL)
+        _bench_pair(f"sparse_join_d2d_n{n}_d{int(density * 100)}",
+                    lambda: joinsmod.d2d_sparse(A, B, pred.left,
+                                                pred.right, MUL),
+                    lambda: fn(aj, bj), out.nnz)
+
+    # -- V2V (sort-merge entry join): numpy sort-merge vs device --
+    for n, density in ((1024, 0.01), (1024, 0.05), (1024, 0.20)):
+        nnz_side = density * n * n
+        domain = max(1000, int(nnz_side * nnz_side / 2e6))
+        a = _quantized(rng, n, density, domain)
+        b = _quantized(rng, n, density, domain)
+        A, B = _bm(a), _bm(b)
+        pred = parse_join("VAL=VAL")
+        cap = jdev.round_capacity(jdev.exact_capacity(a, b, pred, prof))
+        side = lambda m: jdev.round_capacity(np.count_nonzero(m))
+        fn = jax.jit(functools.partial(
+            jdev.v2v_device, merge=MUL.fn, prof=prof, cap=cap,
+            cap_a=side(a), cap_b=side(b), use_bloom=False))
+        aj, bj = A.value, B.value
+        out = joinsmod.v2v_sparse(A, B, MUL, use_bloom=False)
+        _bench_pair(f"sparse_join_v2v_n{n}_d{int(density * 100)}",
+                    lambda: joinsmod.v2v_sparse(A, B, MUL, use_bloom=False),
+                    lambda: fn(aj, bj), out.nnz)
+
+    # -- overlay through the whole-plan staged path: block-skip ratio --
+    from repro.plan import PlanExecutor
+    n = 2048
+    a = np.zeros((n, n), np.float32)
+    b = np.zeros((n, n), np.float32)
+    a[: n // 4, :] = rng.normal(size=(n // 4, n)).astype(np.float32)
+    b[:, : n // 4] = rng.normal(size=(n, n // 4)).astype(np.float32)
+    s = Session(block_size=BS)
+    A = s.load(a, "A")
+    B = s.load(b, "B")
+    q = A.join(B, "RID=RID AND CID=CID", MUL).nnz("a")
+    pplan = s.physical_plan(s._optimized(q.plan))
+    ex = PlanExecutor(s.env)
+    t = timeit(lambda: ex.run(pplan).value, repeats=3, warmup=1)
+    skip = ex.stats["blocks_skipped"] / max(1, ex.stats["blocks_total"])
+    row(f"sparse_overlay_staged_n{n}", t,
+        f"block_skip={skip:.2f} staged={ex.stats['staged_sparse'] > 0}")

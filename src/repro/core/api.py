@@ -248,6 +248,15 @@ class Matrix:
         prediction (dense jit-safe plans on a mesh only)."""
         if physical:
             plan = self.physical_plan()
+            if plan.mode == "sparse":
+                # annotate propagated masks / nnz bounds / COO capacities
+                # from the session catalog so EXPLAIN shows the numbers
+                # the cost gates actually used (repro.plan.masks)
+                from repro.plan import masks as masksmod
+                try:
+                    masksmod.annotate(plan, self.session.env)
+                except KeyError:
+                    pass  # unbound leaves: render the un-annotated plan
             measured = None
             if measure_comm:
                 from repro.plan.executor import staged_collective_bytes

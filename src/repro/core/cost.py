@@ -109,6 +109,13 @@ V2V_BLOOM_MIN_ENTRIES = 256
 BLOOM_SORTMERGE = "bloom-sortmerge"
 SORTMERGE = "sortmerge"
 
+# Largest static COO expansion buffer the device-resident sparse tier will
+# allocate for one join (entries; idx+val ≈ 20 B each). Joins whose
+# plan-time capacity bound exceeds this run on the host oracle instead —
+# the "guarded fallback" of the mask-propagation pass (repro.plan.masks,
+# which also honors the REPRO_SPARSE_CAP env override).
+SPARSE_DEVICE_CAP = 1 << 23
+
 
 @dataclasses.dataclass(frozen=True)
 class JoinStrategyChoice:

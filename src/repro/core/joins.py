@@ -85,6 +85,13 @@ def _coo_of(m: Union[BlockMatrix, jnp.ndarray]):
     return idx, v[tuple(idx.T)], v
 
 
+def _out_dtype(adense: np.ndarray, bdense: np.ndarray) -> np.dtype:
+    """Value dtype of a join result: the promoted input dtype — also on
+    the empty paths, so an empty result has the same dtype as a populated
+    one (float32 under JAX defaults, never a hardcoded float64)."""
+    return np.result_type(adense.dtype, bdense.dtype)
+
+
 # ---------------------------------------------------------------------------
 # Dense reference implementations (jit-able oracles).
 # ---------------------------------------------------------------------------
@@ -187,7 +194,8 @@ def cross_sparse(a: BlockMatrix, b: BlockMatrix,
         bv = bdense[tuple(bi.T)]
     na, nb = av.shape[0], bv.shape[0]
     if na * nb == 0:
-        return COOTensor(np.zeros((0, 4), np.int64), np.zeros((0,)),
+        return COOTensor(np.zeros((0, 4), np.int64),
+                         np.zeros((0,), _out_dtype(adense, bdense)),
                          a.shape + b.shape)
     # all pairs (vectorized): [na*nb]
     vals = np.asarray(merge.fn(np.repeat(av, nb), np.tile(bv, na)))
@@ -223,14 +231,8 @@ def overlay_sparse(a: BlockMatrix, b: BlockMatrix, merge: MergeFn,
     if transpose:
         bval, bmask = bval.T, bmask.T
     amask = np.asarray(a.block_mask)
-    if prof.inducing_x and prof.inducing_y:
-        out_mask = amask & bmask
-    elif prof.inducing_x:
-        out_mask = amask
-    elif prof.inducing_y:
-        out_mask = bmask
-    else:
-        out_mask = np.ones_like(amask)
+    from repro.core.matrix import mask_overlay
+    out_mask = mask_overlay(prof.inducing_x, prof.inducing_y, amask, bmask)
     # adaptive execution: when most blocks are live, the block gather/
     # scatter machinery is pure overhead — evaluate the merge as one
     # block-masked kernel over the full matrices (the paper reports the
@@ -240,15 +242,8 @@ def overlay_sparse(a: BlockMatrix, b: BlockMatrix, merge: MergeFn,
             out = merge.fn(a.value, bval)
         else:
             from repro.kernels import registry
-            from repro.kernels.merge_join import MODE_BOTH, MODE_X, MODE_Y
-            # a partial out_mask implies the merge induces on some side
-            # (the non-inducing case sets out_mask all-ones, handled above)
-            if prof.inducing_x and prof.inducing_y:
-                mode = MODE_BOTH
-            elif prof.inducing_x:
-                mode = MODE_X
-            else:
-                mode = MODE_Y
+            from repro.kernels.merge_join import mode_for
+            mode = mode_for(prof.inducing_x, prof.inducing_y)
             out = registry.dispatch(
                 "merge_join", a.value, bval, jnp.asarray(amask),
                 jnp.asarray(bmask), backend=kernel_backend,
@@ -301,13 +296,14 @@ def d2d_sparse(a: BlockMatrix, b: BlockMatrix, left: Field, right: Field,
     counts = (a_starts[1:] - a_starts[:-1]) * (b_starts[1:] - b_starts[:-1])
     total = int(counts.sum())
     if total == 0:
-        return COOTensor(np.zeros((0, 3), np.int64), np.zeros((0,)),
+        return COOTensor(np.zeros((0, 3), np.int64),
+                         np.zeros((0,), _out_dtype(adense, bdense)),
                          (d1, d2, d3))
     out_i = np.empty(total, np.int64)
     out_j = np.empty(total, np.int64)
     out_l = np.empty(total, np.int64)
-    out_x = np.empty(total, av.dtype if av.size else np.float64)
-    out_y = np.empty(total, bv.dtype if bv.size else np.float64)
+    out_x = np.empty(total, av.dtype)
+    out_y = np.empty(total, bv.dtype)
     pos = 0
     for key in np.nonzero(counts)[0]:
         a0, a1 = a_starts[key], a_starts[key + 1]
@@ -360,7 +356,8 @@ def v2v_sparse(a: BlockMatrix, b: BlockMatrix, merge: MergeFn,
             log2_bits=bloom_params.log2_bits))
         ai, av = ai[hits], av[hits]
     if av.size == 0 or bv.size == 0:
-        return COOTensor(np.zeros((0, 4), np.int64), np.zeros((0,)),
+        return COOTensor(np.zeros((0, 4), np.int64),
+                         np.zeros((0,), _out_dtype(adense, bdense)),
                          a.shape + b.shape)
     # exact sort-merge on float32-rounded keys (Bloom hashing is float32,
     # equality is evaluated exactly here)
@@ -371,7 +368,8 @@ def v2v_sparse(a: BlockMatrix, b: BlockMatrix, merge: MergeFn,
     counts = hi - lo
     total = int(counts.sum())
     if total == 0:
-        return COOTensor(np.zeros((0, 4), np.int64), np.zeros((0,)),
+        return COOTensor(np.zeros((0, 4), np.int64),
+                         np.zeros((0,), _out_dtype(adense, bdense)),
                          a.shape + b.shape)
     rep_a = np.repeat(np.arange(av.size), counts)
     gather_b = np.concatenate(
@@ -409,7 +407,9 @@ def d2v_sparse(a: BlockMatrix, b: BlockMatrix, dim: Field,
             ij = (key, o) if dim is Field.RID else (o, key)
             rows.append((ij[0], ij[1], k_idx[0], k_idx[1], v))
     if not rows:
-        return COOTensor(np.zeros((0, 4), np.int64), np.zeros((0,)),
+        return COOTensor(np.zeros((0, 4), np.int64),
+                         np.zeros((0,), _out_dtype(np.asarray(a.value),
+                                                   np.asarray(b.value))),
                          a.shape + b.shape)
     arr = np.array(rows)
     return COOTensor(arr[:, :4].astype(np.int64), arr[:, 4],
@@ -438,6 +438,68 @@ def join_distributed(mesh, a: BlockMatrix, b: BlockMatrix, pred: JoinPred,
     raise NotImplementedError(
         f"per-call distributed execution not defined for {k}; "
         "use the whole-plan SPMD path (repro.plan)")
+
+
+def join_sparse_device(a: BlockMatrix, b: BlockMatrix, pred: JoinPred,
+                       merge: MergeFn, cap: Optional[int] = None,
+                       use_bloom: bool = False,
+                       kernel_backend: Optional[str] = None):
+    """Per-call entry to the device-resident COO tier (§4.4–§4.6).
+
+    Runs one join through ``repro.core.joins_device`` and converts the
+    static-capacity buffers back to a host ``COOTensor`` — the eager
+    counterpart of the whole-plan staged path (``repro.plan.executor``),
+    used by the parity tests and benchmarks. ``cap`` defaults to the
+    exact expansion count (one host scan); an explicit ``cap`` that turns
+    out too small raises instead of silently truncating. Overlay joins
+    have no COO form — use ``join_sparse`` (already block-skip + kernel
+    based) for those.
+    """
+    from repro.core import joins_device as jdev
+    prof = analyze_merge(merge)
+    if cap is None:
+        cap = jdev.round_capacity(jdev.exact_capacity(
+            np.asarray(a.value), np.asarray(b.value), pred, prof))
+    av, bv = jnp.asarray(a.value), jnp.asarray(b.value)
+    k = pred.kind
+
+    def _side(v, skip):
+        c = int(np.count_nonzero(np.asarray(v))) if skip else v.size
+        return jdev.round_capacity(c)
+
+    if k is JoinKind.CROSS:
+        out = jdev.cross_device(av, bv, merge.fn, prof, cap,
+                                cap_a=_side(av, prof.inducing_x),
+                                cap_b=_side(bv, prof.inducing_y))
+    elif k is JoinKind.D2D:
+        out = jdev.d2d_device(av, bv, pred.left, pred.right, merge.fn,
+                              prof, cap,
+                              cap_a=_side(av, prof.inducing_x),
+                              cap_b=_side(bv, prof.inducing_y))
+    elif k is JoinKind.V2V:
+        skip = prof.inducing_x or prof.inducing_y
+        out = jdev.v2v_device(av, bv, merge.fn, prof, cap,
+                              cap_a=_side(av, skip), cap_b=_side(bv, skip),
+                              use_bloom=use_bloom,
+                              kernel_backend=kernel_backend)
+    elif k is JoinKind.D2V:
+        out = jdev.d2v_device(av, bv, pred.left, merge.fn, prof, cap,
+                              cap_a=_side(av, prof.inducing_x))
+    elif k is JoinKind.V2D:
+        out = jdev.v2d_device(av, bv, pred.right, merge.fn, prof, cap,
+                              cap_a=_side(bv, prof.inducing_y))
+    else:
+        raise ValueError(f"no device COO form for {k}")
+    if jdev.overflowed(out):
+        raise ValueError(
+            f"device join capacity {cap} < required {int(out.total)}")
+    if k is JoinKind.D2D:
+        aa = a.shape if pred.left is Field.RID else a.shape[::-1]
+        bb = b.shape if pred.right is Field.RID else b.shape[::-1]
+        out_shape = (min(aa[0], bb[0]), aa[1], bb[1])
+    else:
+        out_shape = a.shape + b.shape
+    return jdev.coo_to_host(out, out_shape)
 
 
 def join_sparse(a: BlockMatrix, b: BlockMatrix, pred: JoinPred,

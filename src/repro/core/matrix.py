@@ -139,6 +139,67 @@ def unblock(tiles: jnp.ndarray, m: int, n: int) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Block-mask algebra (plan-time, host numpy): the closed set of rules by
+# which block nonzero masks propagate through operators. A mask is a
+# CONSERVATIVE certificate — ``mask[i, j] == False`` guarantees block
+# (i, j) is all zeros; True only means "possibly nonzero". Every rule
+# below preserves that invariant (no false negatives), which is what lets
+# the staged executor skip dead blocks and size COO capacities soundly
+# (``repro.plan.masks`` runs these over the physical DAG).
+# ---------------------------------------------------------------------------
+
+def mask_grid(shape: Tuple[int, int], block_size: int) -> Tuple[int, int]:
+    return (_ceil_div(shape[0], block_size), _ceil_div(shape[1], block_size))
+
+
+def mask_ones(shape: Tuple[int, int], block_size: int) -> np.ndarray:
+    return np.ones(mask_grid(shape, block_size), bool)
+
+
+def mask_matmul(ma: np.ndarray, mb: np.ndarray) -> np.ndarray:
+    """Block mask of A×B: out[i,j] = ∨_k (ma[i,k] ∧ mb[k,j])."""
+    return (ma.astype(np.int64) @ mb.astype(np.int64)) > 0
+
+
+def mask_overlay(inducing_x: bool, inducing_y: bool, ma: np.ndarray,
+                 mb: np.ndarray) -> np.ndarray:
+    """Block mask of an overlay f(A, B) under f's sparsity profile:
+    inducing on both sides ⇒ ma ∧ mb; on one ⇒ that side's mask;
+    non-inducing f can be nonzero anywhere (f(0,0) ≠ 0 is allowed)."""
+    if inducing_x and inducing_y:
+        return ma & mb
+    if inducing_x:
+        return ma.copy()
+    if inducing_y:
+        return mb.copy()
+    return np.ones_like(ma)
+
+
+def _block_extents(dim: int, blocks: int, block_size: int) -> np.ndarray:
+    """Entry count of each block along one axis (the last one is ragged)."""
+    ext = np.full(blocks, block_size, np.int64)
+    if blocks:
+        ext[-1] = dim - (blocks - 1) * block_size
+    return ext
+
+
+def mask_nnz_cap(mask: np.ndarray, shape: Tuple[int, int],
+                 block_size: int) -> float:
+    """Upper bound on nnz implied by a block mask (ragged edges counted)."""
+    rh = _block_extents(shape[0], mask.shape[0], block_size)
+    cw = _block_extents(shape[1], mask.shape[1], block_size)
+    return float((rh[:, None] * cw[None, :])[mask].sum())
+
+
+def mask_band_nnz_caps(mask: np.ndarray, shape: Tuple[int, int],
+                       block_size: int) -> np.ndarray:
+    """Per-block-row nnz upper bounds (for keyed-join capacity bounds)."""
+    rh = _block_extents(shape[0], mask.shape[0], block_size)
+    cw = _block_extents(shape[1], mask.shape[1], block_size)
+    return (mask * cw[None, :]).sum(axis=1) * rh
+
+
+# ---------------------------------------------------------------------------
 # Tensors (join outputs of order 3/4): dense backing + COO view (paper §5.1
 # stores tensors as matrix-block slices keyed by a non-aggregated dimension;
 # our dense layout keeps D1 leading for the same locality reason).

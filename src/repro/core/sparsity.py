@@ -10,7 +10,6 @@ handful of extra probes for robustness against pathological nonlinear fns).
 from __future__ import annotations
 
 import dataclasses
-from functools import lru_cache
 
 import numpy as np
 
@@ -45,11 +44,6 @@ def _probe(fn, zero_first: bool) -> bool:
 def analyze_merge(merge: MergeFn) -> SparsityProfile:
     """Sampling-based sparsity-inducing test (cached by merge-fn name)."""
     return _analyze_cached(merge.name, merge.fn)
-
-
-@lru_cache(maxsize=256)
-def _analyze_by_name(name: str):  # pragma: no cover - cache plumbing
-    raise KeyError(name)
 
 
 _CACHE = {}

@@ -28,6 +28,18 @@ MODE_Y = 2      # inducing on y:       compute where maskB
 MODE_ALL = 3    # not inducing:        compute everywhere
 
 
+def mode_for(inducing_x: bool, inducing_y: bool) -> int:
+    """The single profile→mode rule (``core.matrix.mask_overlay`` is its
+    block-mask twin — keep the two in lockstep)."""
+    if inducing_x and inducing_y:
+        return MODE_BOTH
+    if inducing_x:
+        return MODE_X
+    if inducing_y:
+        return MODE_Y
+    return MODE_ALL
+
+
 def _kernel(ma_ref, mb_ref, a_ref, b_ref, out_ref, *, merge: Callable,
             mode: int):
     ma, mb = ma_ref[0, 0], mb_ref[0, 0]

@@ -138,12 +138,14 @@ class _Builder:
                     flops = (costmod.node_flops(mm_side)
                              * max(sparse_side.sparsity, 1e-3)
                              + float(e.size))
+                    # jit-safe: the staged sparse path gates the matmul
+                    # with the plan-time propagated mask (a static array,
+                    # unlike the runtime block mask) — see repro.plan.masks
                     return self.emit(
                         P.MASKED_ELEMWISE, e, (sp, w, h), (e.op, flip),
                         flops, kernel="masked_matmul",
                         backend=self._backend("masked_matmul"),
-                        strategy="sddmm", jit_safe=False,
-                        meta={"flip": flip})
+                        strategy="sddmm", meta={"flip": flip})
         return self.emit(P.ELEMWISE, e,
                          (self.lower(e.a), self.lower(e.b)), (e.op,),
                          costmod.node_flops(e))
@@ -162,13 +164,17 @@ class _Builder:
             partition = partmod.plan_join_static(
                 e.pred, costmod.size_of(e.a), costmod.size_of(e.b),
                 self.n_workers).choice
-        # sparse-tier joins run COO/bloom machinery on host; only the dense
-        # reference tier stages into jit
+        # every join family now has a jittable implementation: the dense
+        # reference on the dense tier, and the device-resident COO /
+        # block-skip machinery (core.joins_device, staged with plan-time
+        # capacities and masks) on the sparse tier. The mask pass can
+        # still veto staging per plan when a COO capacity bound exceeds
+        # the device limit (the guarded host fallback).
         return self.emit(
             P.JOIN, e, (self.lower(e.a), self.lower(e.b)),
             (e.pred, e.merge), costmod.node_flops(e),
             kernel=kernel, backend=backend, strategy=strategy,
-            partition=partition, jit_safe=(self.mode == "dense"))
+            partition=partition)
 
     def _backend(self, kernel: str) -> Optional[str]:
         from repro.kernels import registry
@@ -187,7 +193,8 @@ def build_plan(e: Expr, *, mode: str = "sparse", block_size: int = 256,
     root = b.lower(e)
     plan = P.PhysicalPlan(
         nodes=tuple(b.nodes), root=root, mode=mode, block_size=block_size,
-        n_workers=n_workers, logical_nodes=count_nodes(e))
+        n_workers=n_workers, logical_nodes=count_nodes(e),
+        use_bloom=use_bloom)
     if n_workers > 1:
         # plan-wide scheme propagation: every node gets an output scheme
         # chosen knowing its consumers, so op boundaries compose without

@@ -23,6 +23,18 @@ via ``with_sharding_constraint`` — one GSPMD program for the whole plan, so
 consecutive operators hand off partitioned data without host round-trips,
 and the collectives XLA inserts are exactly the reshards the cost model
 predicted (validated by ``measured_collective_bytes``).
+
+* **jit-staged sparse** — sparse-tier plans stage too: overlay joins and
+  masked matmuls are gated by the *plan-time propagated* block masks
+  (``repro.plan.masks`` — static arrays, so dead blocks vanish from the
+  trace as skipped gathers), and COO-producing joins run the
+  device-resident tier (``repro.core.joins_device``) over static-capacity
+  buffers sized from the propagated nnz bounds. Mixed sparse/dense plans
+  therefore compile to ONE program (GSPMD on a mesh) with zero host
+  round-trips inside the staged region. Guarded: a plan whose capacity
+  bound exceeds ``masks.device_cap_limit()``, or whose buffers overflow
+  at runtime (leaf values drifted under an unchanged block mask), falls
+  back to the eager host oracle for that run.
 """
 from __future__ import annotations
 
@@ -30,8 +42,10 @@ from typing import Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import joins as joinsmod
+from repro.core import joins_device as joinsdev
 # shared primitive semantics: defined once next to the tree-walk oracle so
 # the two engines cannot drift
 from repro.core.executor import (
@@ -61,14 +75,21 @@ class PlanExecutor:
         self.mesh = mesh
         self.stats: Dict[str, int] = {
             "node_evals": 0, "matmuls": 0, "masked_matmuls": 0, "joins": 0,
-            "staged": 0, "staged_spmd": 0,
+            "staged": 0, "staged_spmd": 0, "staged_sparse": 0,
+            "staged_sparse_spmd": 0, "sparse_fallbacks": 0,
+            "sparse_overflows": 0, "blocks_skipped": 0, "blocks_total": 0,
         }
 
     # -- public ---------------------------------------------------------------
     def run(self, plan: P.PhysicalPlan) -> Result:
-        if plan.mode == "dense" and self.stage_jit and plan.jit_safe:
+        if self.stage_jit and plan.jit_safe:
             spmd = self.mesh is not None and plan.n_workers > 1
-            return self._run_staged(plan, self.mesh if spmd else None)
+            mesh = self.mesh if spmd else None
+            if plan.mode == "dense":
+                return self._run_staged(plan, mesh)
+            out = self._run_staged_sparse(plan, mesh)
+            if out is not _FALLBACK:
+                return out
         return self._run_eager(plan)
 
     # -- eager path -----------------------------------------------------------
@@ -173,6 +194,75 @@ class PlanExecutor:
         out = fn(*leaf_vals)
         return dense_join_result(out, plan.block_size)
 
+    # -- jit-staged sparse path -----------------------------------------------
+    def _run_staged_sparse(self, plan: P.PhysicalPlan, mesh=None):
+        """Stage a sparse-tier plan into one (GSPMD) program, or return
+        ``_FALLBACK`` when the mask pass vetoes staging / buffers overflow."""
+        from repro.plan import masks as masksmod
+        masksmod.annotate(plan, self.env)
+        if not masksmod.stageable(plan):
+            self.stats["sparse_fallbacks"] += 1
+            return _FALLBACK
+        slot = "_staged_sparse_spmd_fn" if mesh is not None \
+            else "_staged_sparse_fn"
+        # the trace bakes in the propagated masks and the COO capacities
+        # (expansion AND side buffers), which can change under an
+        # unchanged expr — key the staged cache on all of them, as a
+        # small map so sessions alternating between leaf bindings don't
+        # retrace on every collect
+        caps = tuple((n.op_id, n.meta.get("cap"), n.meta.get("cap_sides"))
+                     for n in plan.nodes if n.kind == P.JOIN)
+        key = (plan._mask_key, caps)
+        cache = getattr(plan, slot)
+        if cache is None:
+            cache = {}
+            setattr(plan, slot, cache)
+        entry = cache.get(key)
+        if entry is None:
+            while len(cache) >= _STAGED_SPARSE_CACHE_LIMIT:
+                cache.pop(next(iter(cache)))
+            entry = _stage_sparse(plan, mesh)
+            cache[key] = entry
+        fn, leaf_names, skip_stats = entry
+        for name in leaf_names:
+            if name not in self.env:
+                raise KeyError(f"unbound matrix {name!r}")
+        leaf_vals = tuple(self.env[name].value for name in leaf_names)
+        out = fn(*leaf_vals)
+        root = plan.node(plan.root)
+        if isinstance(out, joinsdev.DeviceCOO) and joinsdev.overflowed(out):
+            # leaf values drifted under an unchanged block mask: the
+            # exact plan-time capacity went stale. Recover on the host
+            # oracle now (which counts its own evaluations) and force a
+            # re-annotation for the next run.
+            plan._mask_key = None
+            self.stats["sparse_overflows"] += 1
+            return _FALLBACK
+        self.stats["staged_sparse_spmd" if mesh is not None
+                   else "staged_sparse"] += 1
+        self.stats["node_evals"] += plan.n_nodes
+        # the staged program computes every DAG node exactly once, so the
+        # per-kind compute counters (the CSE evidence) stay meaningful
+        self.stats["matmuls"] += plan.count(P.MATMUL)
+        self.stats["masked_matmuls"] += plan.count(P.MASKED_ELEMWISE)
+        self.stats["joins"] += plan.count(P.JOIN)
+        self.stats["blocks_skipped"] += skip_stats[0]
+        self.stats["blocks_total"] += skip_stats[1]
+        if isinstance(out, joinsdev.DeviceCOO):
+            return joinsdev.coo_to_host(out, root.shape)
+        mask = root.meta.get("mask")
+        if mask is not None:
+            return BlockMatrix(out, jnp.asarray(mask), plan.block_size)
+        return BlockMatrix.from_dense(out, plan.block_size)
+
+
+_FALLBACK = object()  # sentinel: staged sparse declined; run the eager oracle
+
+# Bounds the per-plan staged-sparse compile cache: each entry pins a jitted
+# executable; sessions alternating among a few leaf bindings stay compiled,
+# pathological churn evicts oldest-first.
+_STAGED_SPARSE_CACHE_LIMIT = 4
+
 
 def _stage(plan: P.PhysicalPlan, mesh=None):
     """Compile the whole DAG into one jit-ed function of the leaf arrays.
@@ -237,6 +327,180 @@ def _stage(plan: P.PhysicalPlan, mesh=None):
         return vals[plan.root]
 
     return jax.jit(fn), leaf_names
+
+
+def _stage_sparse(plan: P.PhysicalPlan, mesh=None):
+    """Compile a sparse-tier DAG into one jit-ed function of the leaves.
+
+    Identical skeleton to ``_stage``, but sparsity-aware per node: overlay
+    joins and masked matmuls are gated by the plan-time propagated block
+    masks (static numpy arrays baked into the trace — dead blocks are
+    *absent*, not branched over), and COO-producing joins lower to the
+    device tier with their plan-time capacities. Returns
+    ``(fn, leaf_names, (blocks_skipped, blocks_total))`` where the skip
+    counts are the static block-gating totals of this trace.
+    """
+    from repro.core.sparsity import analyze_merge
+    from repro.kernels import registry
+    from repro.kernels.merge_join import mode_for
+    from repro.core import cost as costmod
+    from repro.core.matrix import blocks_of, unblock
+    from repro.core.predicates import JoinKind
+
+    bs = plan.block_size
+    env_leaves = [n for n in plan.nodes
+                  if n.kind == P.LEAF and not n.expr.name.startswith("ones(")]
+    leaf_names = tuple(n.expr.name for n in env_leaves)
+    arg_index = {n.op_id: i for i, n in enumerate(env_leaves)}
+
+    # static block-gating totals of this trace (masks are plan-time data)
+    skipped = total = 0
+    for n in plan.nodes:
+        gated = (n.kind == P.MASKED_ELEMWISE
+                 and not n.meta.get("demote_dense")) \
+            or (n.kind == P.JOIN and n.expr.pred.kind in
+                (JoinKind.DIRECT_OVERLAY, JoinKind.TRANSPOSE_OVERLAY))
+        if gated and n.meta.get("mask") is not None:
+            skipped += int(n.meta["mask"].size - n.meta["mask"].sum())
+            total += int(n.meta["mask"].size)
+    skip_stats = (skipped, total)
+
+    constraint = None
+    if mesh is not None:
+        from repro.core.partitioner import sharding_for
+
+        def constraint(node, v):
+            # COO buffers keep XLA's default placement: the paper's r/c/b
+            # schemes describe dense matrix layouts, not entry sets
+            if node.scheme is None or not isinstance(v, jnp.ndarray):
+                return v
+            return jax.lax.with_sharding_constraint(
+                v, sharding_for(mesh, node.scheme, v.ndim))
+
+    def _overlay(node, av, bv):
+        e: Join = node.expr
+        transpose = e.pred.kind is JoinKind.TRANSPOSE_OVERLAY
+        bval = bv.T if transpose else bv
+        out_mask = node.meta["mask"]
+        prof = analyze_merge(e.merge)
+        if out_mask.all():
+            return e.merge.fn(av, bval)
+        if out_mask.mean() > 0.5:
+            # mostly-live: one block-masked kernel over the full matrices
+            # (mirrors the host tier's adaptive cutover)
+            ma = plan.node(node.children[0]).meta["mask"]
+            mb = plan.node(node.children[1]).meta["mask"]
+            if transpose:
+                mb = mb.T
+            return registry.dispatch(
+                "merge_join", av, bval, jnp.asarray(ma), jnp.asarray(mb),
+                backend=node.backend, merge=e.merge.fn,
+                mode=mode_for(prof.inducing_x, prof.inducing_y),
+                block_size=bs)
+        # sparse: gather the live blocks (static indices — skipped blocks
+        # never enter the trace), vmap the merge, scatter back. The
+        # output carries the promoted input dtype so mask density never
+        # changes the result dtype vs. the all-live / host paths.
+        ib, jb = np.nonzero(out_mask)
+        m, n = node.shape
+        dt = jnp.result_type(av.dtype, bval.dtype)
+        if ib.size == 0:
+            return jnp.zeros((m, n), dt)
+        at = blocks_of(av, bs)
+        bt = blocks_of(bval, bs)
+        merged = jax.vmap(e.merge.fn)(at[ib, jb], bt[ib, jb])
+        full = jnp.zeros(at.shape, dt)
+        full = full.at[ib, jb].set(merged.astype(dt))
+        return unblock(full, m, n)
+
+    def _coo_join(node, av, bv):
+        e: Join = node.expr
+        prof = analyze_merge(e.merge)
+        cap = node.meta["cap"]
+        k = e.pred.kind
+        ca, cb = node.meta.get("cap_sides", (None, None))
+        if k is JoinKind.CROSS:
+            return joinsdev.cross_device(av, bv, e.merge.fn, prof, cap,
+                                         cap_a=ca, cap_b=cb)
+        if k is JoinKind.D2D:
+            return joinsdev.d2d_device(av, bv, e.pred.left, e.pred.right,
+                                       e.merge.fn, prof, cap,
+                                       cap_a=ca, cap_b=cb)
+        if k is JoinKind.V2V:
+            return joinsdev.v2v_device(
+                av, bv, e.merge.fn, prof, cap, cap_a=ca, cap_b=cb,
+                use_bloom=(node.strategy == costmod.BLOOM_SORTMERGE),
+                kernel_backend=node.backend)
+        if k is JoinKind.D2V:
+            return joinsdev.d2v_device(av, bv, e.pred.left, e.merge.fn,
+                                       prof, cap, cap_a=ca)
+        if k is JoinKind.V2D:
+            # the line-matrix side of the mirror is B (child 1)
+            return joinsdev.v2d_device(av, bv, e.pred.right, e.merge.fn,
+                                       prof, cap, cap_a=cb)
+        raise ValueError(k)
+
+    def _masked(node, sp, w, h):
+        e: ElemWise = node.expr
+        flip = node.meta["flip"]
+        if node.meta.get("demote_dense"):
+            prod = jnp.dot(w, h, preferred_element_type=w.dtype)
+        else:
+            gate = jnp.asarray(node.meta["mask"])  # static propagated mask
+            prod = registry.dispatch("masked_matmul", w, h, gate,
+                                     backend=node.backend, block_size=bs)
+        if e.op is EWOp.MUL:
+            return sp * prod
+        num, den = (prod, sp) if flip else (sp, prod)
+        return jnp.where((num == 0) | (den == 0), 0.0,
+                         num / jnp.where(den == 0, 1.0, den))
+
+    def fn(*leaf_vals):
+        vals: Dict[int, Union[jnp.ndarray, joinsdev.DeviceCOO]] = {}
+        for node in plan.nodes:
+            k = node.kind
+            e = node.expr
+            ch = [vals[c] for c in node.children]
+            if k == P.LEAF:
+                if node.op_id in arg_index:
+                    v = leaf_vals[arg_index[node.op_id]]
+                else:
+                    v = jnp.ones(e.shape, jnp.float32)
+            elif k == P.TRANSPOSE:
+                v = ch[0].T
+            elif k == P.MATSCALAR:
+                v = ch[0] + e.beta if e.op is EWOp.ADD else ch[0] * e.beta
+            elif k == P.ELEMWISE:
+                v = ew_values(e.op, ch[0], ch[1])
+            elif k == P.MASKED_ELEMWISE:
+                v = _masked(node, ch[0], ch[1], ch[2])
+            elif k == P.MATMUL:
+                v = jnp.dot(ch[0], ch[1],
+                            preferred_element_type=ch[0].dtype)
+            elif k == P.INVERSE:
+                v = jnp.linalg.inv(ch[0])
+            elif k == P.SELECT:
+                v = select_dense(ch[0], e.pred)
+            elif k == P.AGG:
+                v = agg_dense(ch[0], e.fn, e.dim)
+            elif k == P.JOIN:
+                pk = e.pred.kind
+                if pk in (JoinKind.DIRECT_OVERLAY,
+                          JoinKind.TRANSPOSE_OVERLAY):
+                    v = _overlay(node, ch[0], ch[1])
+                else:
+                    # COO outputs have no matrix consumers (the builder
+                    # un-stages any such plan), so this is the root
+                    assert node.op_id == plan.root
+                    v = _coo_join(node, ch[0], ch[1])
+            else:
+                raise TypeError(f"node kind {k!r} is not jit-stageable")
+            if constraint is not None:
+                v = constraint(node, v)
+            vals[node.op_id] = v
+        return vals[plan.root]
+
+    return jax.jit(fn), leaf_names, skip_stats
 
 
 def execute_plan(plan: P.PhysicalPlan, env: Dict[str, BlockMatrix],

@@ -29,6 +29,17 @@ def _annotations(n: PhysicalNode) -> str:
         parts.append(f"kernel={n.kernel}")
     if n.backend:
         parts.append(f"backend={n.backend}")
+    if "nnz_bound" in n.meta:
+        # mask-propagation annotations (repro.plan.masks): certified nnz
+        # bound, live/total block-mask density, COO device capacity
+        parts.append(f"nnz≈{n.meta['nnz_bound']:.4g}")
+        mask = n.meta.get("mask")
+        if mask is not None:
+            parts.append(f"mask={int(mask.sum())}/{mask.size}")
+        if n.meta.get("cap") is not None:
+            parts.append(f"cap={n.meta['cap']}")
+        if n.meta.get("device") is False:
+            parts.append("exec=host-fallback")
     if n.partition is not None:
         parts.append(
             f"schemes=({n.partition.scheme_a},{n.partition.scheme_b})"

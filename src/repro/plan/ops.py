@@ -85,12 +85,24 @@ class PhysicalPlan:
     n_workers: int
     logical_nodes: int                 # node count of the source Expr tree
     total_comm_est: float = 0.0        # predicted entries moved, whole plan
+    use_bloom: bool = True             # session Bloom preference (V2V gate)
 
     # staged-execution caches, populated lazily by the DAG executor
-    # (one per path: plain jit, SPMD jit over the session mesh)
+    # (one per path: plain jit, SPMD jit over the session mesh; the sparse
+    # tier additionally keys on the leaf-mask fingerprint — see
+    # ``repro.plan.masks`` — so data changes restage)
     _staged_fn: Optional[Any] = dataclasses.field(
         default=None, repr=False, compare=False)
     _staged_spmd_fn: Optional[Any] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _staged_sparse_fn: Optional[Any] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _staged_sparse_spmd_fn: Optional[Any] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    # mask-propagation cache (repro.plan.masks.annotate)
+    _mask_key: Optional[tuple] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _mask_infos: Optional[Any] = dataclasses.field(
         default=None, repr=False, compare=False)
 
     @property

@@ -81,7 +81,10 @@ def test_spmd_staged_once_then_cached():
 
 
 @multi_device
-def test_sparse_tier_falls_back_to_eager_on_mesh():
+def test_sparse_tier_stages_spmd_on_mesh():
+    """Since the device-resident sparse tier landed, sparse-mode plans no
+    longer fall back to eager on a mesh: they stage into one GSPMD program
+    like the dense tier (tests/test_sparse_device.py covers the rest)."""
     from repro.core import Session
     from repro.core.api import Matrix
     from repro.core.expr import Leaf
@@ -96,10 +99,18 @@ def test_sparse_tier_falls_back_to_eager_on_mesh():
     q = x.join(x, "RID=RID AND CID=CID", lambda a, b: a + b)
     ex = PlanExecutor(s.env, mesh=s.mesh)
     out = ex.run(s.physical_plan(s._optimized(q.plan)))
-    assert ex.stats["staged_spmd"] == 0 and ex.stats["node_evals"] > 0
+    assert ex.stats["staged_sparse_spmd"] == 1
     want = s.execute(q.optimized_plan().plan, optimize=False, engine="tree")
     np.testing.assert_allclose(np.asarray(out.value),
                                np.asarray(want.value), atol=1e-4)
+
+    # non-jit-safe sparse plans (value-predicate selects) still run eagerly
+    q2 = x.select("VAL>0").join(x, "RID=RID AND CID=CID",
+                                lambda a, b: a + b)
+    ex2 = PlanExecutor(s.env, mesh=s.mesh)
+    ex2.run(s.physical_plan(s._optimized(q2.plan)))
+    assert ex2.stats["staged_sparse_spmd"] == 0
+    assert ex2.stats["node_evals"] > 0
 
 
 @multi_device
