@@ -1,0 +1,112 @@
+"""Optimizer benchmark: greedy oracle vs memo search, cost and wall clock.
+
+Three of the paper's pipeline shapes:
+
+``opt_gate``     — the all-or-nothing gate case. A beneficial rewrite
+                   (Γnnz,r(X+β) → e_m·n, paper Eq. 15: the count needs no
+                   data at all) rides in one branch; the other branch
+                   holds a shared (U×V)ᵀ subexpression whose
+                   ``rule_transpose_matmul`` rewrite regresses — and the
+                   greedy cost gate sums the regression once per logical
+                   occurrence while the hash-consed DAG executes it once,
+                   so the gate trips and greedy discards *both* rewrites.
+                   A value predicate at the root keeps the plan on the
+                   eager path (dynamic masks can't stage), so greedy
+                   genuinely pays two full passes over X per collect()
+                   while the memo search — which costs candidates against
+                   the physical DAG, per subtree — keeps the win and
+                   rejects the regression.
+``opt_sel_gram`` — select(XᵀX) ⋈ Y (paper Code 2 composed with an
+                   overlay join): both searches find the same pushdown;
+                   memo must not be slower.
+``opt_trace``    — trace(XᵀX) (Fig. 7b): the classic O(n³)→O(n²) rewrite.
+
+Both searches run the SAME rule set (including ``rule_transpose_matmul``,
+new to ``ALL_RULES`` in this PR): the comparison isolates the search
+*policy* — fixpoint + whole-plan gate vs per-subtree physical costing —
+not the rules available. Timing is *paired*: each repeat runs both
+searches back to back in alternating order on identical data (one seed
+per arm) and records the ratio, so the median speedup is robust against
+the drift of a throttled shared box. The committed BENCH_opt.json gates
+the claim that search beats greedy end-to-end on ≥1 pipeline.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import MergeFn, Session, physical_cost
+
+
+def _paired(name: str, loader, repeats: int = 9, derived: str = "") -> None:
+    queries, costs = {}, {}
+    for search in ("greedy", "memo"):
+        s = Session(block_size=128, search=search)
+        # fresh identically-seeded rng per arm: both searches must be
+        # timed and plan-costed on the *same* matrices
+        mx = loader(s, np.random.default_rng(7))
+        queries[search] = mx
+        costs[search] = physical_cost(mx.optimized_plan().plan, s).total
+        jax.block_until_ready(mx.collect().value)   # warm plan + staging
+
+    def once(mx):
+        t0 = time.perf_counter()
+        jax.block_until_ready(mx.collect().value)
+        return (time.perf_counter() - t0) * 1e6
+
+    times = {"greedy": [], "memo": []}
+    ratios = []
+    for i in range(repeats):
+        order = ("greedy", "memo") if i % 2 == 0 else ("memo", "greedy")
+        t = {srch: once(queries[srch]) for srch in order}
+        times["greedy"].append(t["greedy"])
+        times["memo"].append(t["memo"])
+        ratios.append(t["greedy"] / t["memo"])
+    speed = float(np.median(ratios))
+    cost_ratio = costs["greedy"] / max(costs["memo"], 1e-9)
+    row(f"{name}_greedy", float(np.median(times["greedy"])),
+        f"plan_cost={costs['greedy']:.4g}")
+    row(f"{name}_memo", float(np.median(times["memo"])),
+        f"plan_cost={costs['memo']:.4g} cost_ratio={cost_ratio:.2f}x "
+        f"paired_speedup={speed:.2f}x {derived}".rstrip())
+
+
+def run(_rng) -> None:
+    # -- opt_gate: beneficial prefix + amplified regressing rule -------------
+    M, N = 2048, 1536
+    n, m = 320, 12
+
+    def load_gate(s, rng):
+        X = s.load(rng.normal(size=(M, N)).astype(np.float32), "X")
+        U = s.load(rng.normal(size=(1, n)).astype(np.float32), "U")
+        V = s.load(rng.normal(size=(n, M)).astype(np.float32), "V")
+        counts = X.add(3.0).nnz("r")          # Eq. 15: rewrites to e_m·N
+        T = U.multiply(V).t()                 # (U×V)ᵀ, shared m times
+        R = T
+        for _ in range(m - 1):
+            R = R.add(T)
+        return counts.emul(R).select("VAL>0")  # val pred: eager path
+
+    _paired("opt_gate", load_gate, derived="keep-best-subtree")
+
+    # -- opt_sel_gram: select(XtX) ⋈ Y ---------------------------------------
+    K = 384
+    mul = MergeFn("mul", lambda x, y: x * y)
+
+    def load_sel(s, rng):
+        X = s.load(rng.normal(size=(K, K)).astype(np.float32), "X")
+        Y = s.load(rng.normal(size=(1, K)).astype(np.float32), "Y")
+        sel = X.t().multiply(X).select("RID=7")
+        return sel.join(Y, "RID=RID AND CID=CID", mul)
+
+    _paired("opt_sel_gram", load_sel)
+
+    # -- opt_trace: trace(XtX) ------------------------------------------------
+    def load_trace(s, rng):
+        X = s.load(rng.normal(size=(K, K)).astype(np.float32), "X")
+        return X.t().multiply(X).trace()
+
+    _paired("opt_trace", load_trace)

@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV rows. Mapping to the paper:
     bench_join_entries  — Fig. 11d    (V2V Bloom vs sparsity)
     bench_pnmf          — Table 6     (PNMF pipeline)
     bench_plan_cse      — (beyond paper) planned DAG vs tree-walk CSE
+    bench_optimizer     — (beyond paper) greedy oracle vs memo search
+                          (plan cost + end-to-end wall clock)
     bench_sparse_join   — (beyond paper) host-COO vs device-resident
                           sparse joins + staged block-skip ratio
     bench_dist_comm     — (beyond paper) per-join jit vs whole-plan SPMD
@@ -75,15 +77,15 @@ def main() -> None:
     from benchmarks import (
         bench_agg_gram, bench_cross_product, bench_dist_comm,
         bench_join_dims, bench_join_entries, bench_join_single,
-        bench_plan_cse, bench_pnmf, bench_roofline, bench_select_lr,
-        bench_sparse_join,
+        bench_optimizer, bench_plan_cse, bench_pnmf, bench_roofline,
+        bench_select_lr, bench_sparse_join,
     )
     from benchmarks.common import ROWS, row
 
     mods = [bench_agg_gram, bench_select_lr, bench_cross_product,
             bench_join_dims, bench_join_single, bench_join_entries,
-            bench_pnmf, bench_plan_cse, bench_sparse_join, bench_dist_comm,
-            bench_roofline]
+            bench_pnmf, bench_plan_cse, bench_optimizer, bench_sparse_join,
+            bench_dist_comm, bench_roofline]
     only, json_path = _parse_args(sys.argv[1:])
     print("name,us_per_call,derived")
     t0 = time.time()

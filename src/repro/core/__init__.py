@@ -10,8 +10,9 @@ from repro.core.expr import (
     Agg, AggDim, AggFn, ElemWise, EWOp, Expr, Inverse, Join, Leaf, MatMul,
     MatScalar, MergeFn, Select, Transpose,
 )
+from repro.core.cost import PhysicalCost, physical_cost
 from repro.core.matrix import BlockMatrix, BlockTensor
-from repro.core.optimizer import optimize
+from repro.core.optimizer import optimize, optimize_greedy, optimize_memo
 from repro.core.predicates import (
     Atom, CmpOp, Conjunction, Field, JoinKind, JoinPred, parse_join,
     parse_select,
@@ -19,6 +20,7 @@ from repro.core.predicates import (
 
 __all__ = [
     "Matrix", "Session", "BlockMatrix", "BlockTensor", "optimize",
+    "optimize_greedy", "optimize_memo", "PhysicalCost", "physical_cost",
     "Agg", "AggDim", "AggFn", "ElemWise", "EWOp", "Expr", "Inverse", "Join",
     "Leaf", "MatMul", "MatScalar", "MergeFn", "Select", "Transpose",
     "Atom", "CmpOp", "Conjunction", "Field", "JoinKind", "JoinPred",

@@ -7,13 +7,17 @@
     C = A.join(B, "RID=RID AND CID=CID", f)            # Code 4
     C = A.join(B, "VAL=VAL", f)                        # Code 5
 
-``collect()`` runs the rule-based optimizer, lowers the result into a
-hash-consed physical operator DAG (``repro.plan``) and executes it —
-shared subexpressions are computed once and every strategy decision (join
-algorithm, kernel backend, partition schemes) is made at plan time.
-``collect(optimize=False)`` skips the logical rewrites (the paper's
-MatRel(w/o-opt)); ``collect(engine="tree")`` runs the legacy recursive
-tree-walk executor, kept as the correctness oracle.
+``collect()`` runs the cost-based optimizer — a memoized search over the
+paper's rewrite rules in which every candidate is costed by dry-lowering
+it through the physical layer (``core.optimizer``, ``Session(search=
+"greedy")`` keeps the original fixed-point rewriter as the oracle) —
+lowers the winner into a hash-consed physical operator DAG
+(``repro.plan``) and executes it: shared subexpressions are computed once
+and every strategy decision (join algorithm, kernel backend, partition
+schemes) is made at plan time. ``collect(optimize=False)`` skips the
+logical rewrites (the paper's MatRel(w/o-opt)); ``collect(engine=
+"tree")`` runs the legacy recursive tree-walk executor, kept as the
+correctness oracle.
 """
 from __future__ import annotations
 
@@ -44,19 +48,23 @@ class Session:
 
     def __init__(self, block_size: int = 256, mode: str = "sparse",
                  use_bloom: bool = True, engine: str = "dag",
-                 n_workers: Optional[int] = None):
+                 n_workers: Optional[int] = None, search: str = "memo"):
         if engine not in ("dag", "tree"):
             raise ValueError(f"unknown engine {engine!r}")
+        if search not in ("memo", "greedy"):
+            raise ValueError(f"unknown search {search!r}")
         self.env: Dict[str, BlockMatrix] = {}
         self.block_size = block_size
         self.mode = mode
         self.use_bloom = use_bloom
         self.engine = engine
+        self.search = search
         self.n_workers = n_workers
         self._auto = 0
         self._mesh = None
+        self._env_version = 0
         self._plan_cache: Dict[tuple, "planmod.PhysicalPlan"] = {}
-        self._opt_cache: Dict[Expr, Expr] = {}
+        self._opt_cache: Dict[tuple, optmod.OptimizeResult] = {}
 
     @property
     def workers(self) -> int:
@@ -96,6 +104,9 @@ class Session:
             BlockMatrix.from_dense(jnp.asarray(value, jnp.float32),
                                    self.block_size)
         self.env[name] = bm
+        # (re)binding a leaf invalidates memoized optimize results: the
+        # memo search costs candidates against the bound leaf masks
+        self._env_version += 1
         if sparsity is None:
             sparsity = float(np.asarray(bm.nnz())) / max(1, bm.value.size)
         return Matrix(self, Leaf(name, bm.shape, sparsity))
@@ -114,16 +125,30 @@ class Session:
         return planmod.execute_plan(self.physical_plan(plan), self.env,
                                     mesh=self.mesh)
 
-    def _optimized(self, plan: Expr) -> Expr:
-        """Logical optimization with a bounded per-session memo, so the
-        hot repeated-``collect()`` path skips the rewrite fixpoint too."""
-        hit = self._opt_cache.get(plan)
+    def optimize_result(self, plan: Expr,
+                        search: Optional[str] = None) -> optmod.OptimizeResult:
+        """Session-aware optimization with a bounded per-session memo, so
+        the hot repeated-``collect()`` path skips the search too. The memo
+        search costs candidates against this session's mode / block size /
+        mesh and bound leaf data (``core.cost.physical_cost``), so the
+        cache key carries all of them — like the plan cache — plus the
+        catalog version (bumped by ``load``): mutating a session setting
+        or rebinding a leaf re-optimizes; value drift under an unchanged
+        binding is caught downstream by the staged executor's overflow
+        guard."""
+        search = search or self.search
+        key = (plan, search, self._env_version, self.mode,
+               self.block_size, self.use_bloom, self.n_workers)
+        hit = self._opt_cache.get(key)
         if hit is None:
-            hit = optmod.optimize(plan).plan
+            hit = optmod.optimize(plan, search=search, session=self)
             while len(self._opt_cache) >= _PLAN_CACHE_LIMIT:
                 self._opt_cache.pop(next(iter(self._opt_cache)))
-            self._opt_cache[plan] = hit
+            self._opt_cache[key] = hit
         return hit
+
+    def _optimized(self, plan: Expr) -> Expr:
+        return self.optimize_result(plan).plan
 
     def physical_plan(self, plan: Expr) -> "planmod.PhysicalPlan":
         """Lower ``plan`` (assumed already optimized) into a physical DAG.
@@ -231,8 +256,12 @@ class Matrix:
         return self.join(other, "CROSS", f)
 
     # -- execution -------------------------------------------------------------
-    def optimized_plan(self) -> optmod.OptimizeResult:
-        return optmod.optimize(self.plan)
+    def optimized_plan(self,
+                       search: Optional[str] = None) -> optmod.OptimizeResult:
+        """Optimize against the owning session (its mode, mesh and bound
+        leaves feed the memo search's physical cost model); ``search``
+        overrides the session default ("memo" | "greedy")."""
+        return self.session.optimize_result(self.plan, search=search)
 
     def physical_plan(self, optimize: bool = True) -> planmod.PhysicalPlan:
         plan = self.optimized_plan().plan if optimize else self.plan
@@ -243,11 +272,15 @@ class Matrix:
         """Logical EXPLAIN (rewrites + costs) or, with ``physical=True``,
         the physical DAG with per-node cost, strategy, backend and (on
         multi-worker sessions) propagated partition schemes + predicted
-        comm. ``measure_comm=True`` additionally compiles the staged SPMD
-        program and prints its HLO-measured collective bytes next to the
-        prediction (dense jit-safe plans on a mesh only)."""
+        comm, headed by the optimizer's decision record — the fired
+        logical rules and the top rejected alternatives with their
+        flops/comm/nnz cost breakdowns. ``measure_comm=True``
+        additionally compiles the staged SPMD program and prints its
+        HLO-measured collective bytes next to the prediction (dense
+        jit-safe plans on a mesh only)."""
         if physical:
-            plan = self.physical_plan()
+            result = self.optimized_plan()
+            plan = self.session.physical_plan(result.plan)
             if plan.mode == "sparse":
                 # annotate propagated masks / nnz bounds / COO capacities
                 # from the session catalog so EXPLAIN shows the numbers
@@ -262,7 +295,8 @@ class Matrix:
                 from repro.plan.executor import staged_collective_bytes
                 measured = staged_collective_bytes(
                     plan, self.session.env, self.session.mesh)
-            return planmod.render(plan, measured_bytes=measured)
+            return planmod.render(plan, measured_bytes=measured,
+                                  opt=result)
         return self.optimized_plan().describe(self.plan)
 
     def collect(self, optimize: bool = True, engine: Optional[str] = None):

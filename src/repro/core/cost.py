@@ -98,6 +98,90 @@ def plan_memory(e: Expr) -> float:
 
 
 # ---------------------------------------------------------------------------
+# Unified physical cost (the memo search's objective).
+#
+# One number per candidate rewrite, produced by actually lowering the
+# expression through the physical layer: builder strategy selection +
+# scheme DP (comm entries) + mask-propagated nnz bounds. The weights put
+# the three ledgers in a common "scalar op" unit: moving an entry across
+# the interconnect costs ~COMM_FLOPS_PER_ENTRY ops worth of time, and
+# materializing an intermediate entry costs ~1 write.
+# ---------------------------------------------------------------------------
+
+COMM_FLOPS_PER_ENTRY = 16.0
+MATERIALIZE_FLOPS_PER_ENTRY = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class PhysicalCost:
+    """flops / comm-entries / materialized-nnz breakdown of one lowering."""
+
+    flops: float
+    comm: float
+    nnz: float
+
+    @property
+    def total(self) -> float:
+        return (self.flops + COMM_FLOPS_PER_ENTRY * self.comm
+                + MATERIALIZE_FLOPS_PER_ENTRY * self.nnz)
+
+    def breakdown(self) -> str:
+        return f"{self.flops:.4g}/{self.comm:.4g}/{self.nnz:.4g}"
+
+
+def physical_cost(e: Expr, session=None, *, mode: str = None,
+                  block_size: int = None, use_bloom: bool = None,
+                  n_workers: int = None, leaves=None) -> PhysicalCost:
+    """Cost ``e`` by dry-lowering it through the physical layer.
+
+    Builds the hash-consed physical DAG (``plan.builder`` in cost-only
+    mode: no kernel-backend resolution, nothing staged), runs the scheme
+    DP for the communication total on multi-worker sessions, and — when a
+    session with bound leaves is given — the mask propagation pass for
+    certified per-node nnz bounds. ``leaves`` may carry a shared
+    ``plan.masks.Leaves`` so one optimize() call fetches each catalog
+    array and block mask at most once across all candidate lowerings.
+    """
+    from repro.plan import builder as buildermod
+    from repro.plan import ops as P
+    if session is not None:
+        mode = mode or session.mode
+        block_size = block_size or session.block_size
+        use_bloom = session.use_bloom if use_bloom is None else use_bloom
+        n_workers = n_workers or session.n_workers
+    plan = buildermod.build_plan(
+        e, mode=mode or "sparse", block_size=block_size or 256,
+        use_bloom=True if use_bloom is None else use_bloom,
+        n_workers=n_workers, cost_only=True)
+    bounds = {}
+    if session is not None:
+        from repro.plan import masks as masksmod
+        try:
+            infos = masksmod.annotate(plan, session.env, leaves=leaves)
+            bounds = {i: info.nnz for i, info in infos.items()}
+        except KeyError:
+            pass  # unbound leaves: fall back to the logical estimators
+    nnz = 0.0
+    for node in plan.nodes:
+        if node.kind == P.LEAF:
+            continue
+        size = 1.0
+        for d in node.shape:
+            size *= d
+        # entries this operator materializes: the logical estimate,
+        # tightened by the mask-certified bound where one exists — so a
+        # rewrite that destroys a sparsity mask (densifies an
+        # intermediate) pays for it here even when flops tie
+        est = size * max(node.sparsity, 0.0)
+        cert = bounds.get(node.op_id)
+        if cert is not None:
+            est = min(est, float(cert))
+        nnz += est
+    return PhysicalCost(flops=plan.est_flops, comm=plan.total_comm_est,
+                        nnz=nnz)
+
+
+# ---------------------------------------------------------------------------
 # Entry-join strategy gate (paper §4.5/§4.7): Bloom-filtered vs. plain
 # sort-merge. Chosen at plan time from the nnz estimates.
 # ---------------------------------------------------------------------------

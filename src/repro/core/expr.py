@@ -402,6 +402,72 @@ def cross(a: Expr, b: Expr, merge: MergeFn) -> Join:
 # Tree utilities shared by the rewriter.
 # ---------------------------------------------------------------------------
 
+def expr_key(e: Expr, _memo: Optional[dict] = None) -> tuple:
+    """Stable structural identity of a plan — the memo-table group key.
+
+    Two trees get the same key iff they are the same logical expression:
+    same operator kinds, parameters and child keys. Joins key on the
+    ``MergeFn`` itself (name + callable identity): the memo search
+    substitutes any group member for any other, and behavioural equality
+    of black-box callables is undecidable — probe-point fingerprints
+    collide for functions that agree on the probes and differ elsewhere —
+    so two merges only share a group when they share the callable.
+    (Reusing one ``MergeFn`` across joins is the supported way to let the
+    search see them as equal.)
+    """
+    if _memo is None:
+        _memo = {}
+    hit = _memo.get(id(e))
+    if hit is not None:
+        return hit
+    if isinstance(e, Leaf):
+        params: tuple = (e.name, e.shape, e.sparsity)
+    elif isinstance(e, MatScalar):
+        params = (e.op, e.beta)
+    elif isinstance(e, ElemWise):
+        params = (e.op,)
+    elif isinstance(e, Select):
+        params = (e.pred,)
+    elif isinstance(e, Agg):
+        params = (e.fn, e.dim)
+    elif isinstance(e, Join):
+        params = (e.pred, e.merge)
+    else:  # Transpose / MatMul / Inverse: structure only
+        params = ()
+    key = (type(e).__name__, params,
+           tuple(expr_key(c, _memo) for c in e.children()))
+    _memo[id(e)] = key
+    return key
+
+
+def signature(e: Expr, depth: int = 3) -> str:
+    """One-line compact rendering of a plan (EXPLAIN alternative rows)."""
+    if depth <= 0:
+        return "…"
+    if isinstance(e, Leaf):
+        return e.name
+    if isinstance(e, Transpose):
+        return f"{signature(e.x, depth - 1)}ᵀ"
+    if isinstance(e, MatScalar):
+        return f"({signature(e.x, depth - 1)}{e.op.value}{e.beta:g})"
+    if isinstance(e, ElemWise):
+        return (f"({signature(e.a, depth - 1)}{e.op.value}"
+                f"{signature(e.b, depth - 1)})")
+    if isinstance(e, MatMul):
+        return f"({signature(e.a, depth - 1)}×{signature(e.b, depth - 1)})"
+    if isinstance(e, Inverse):
+        return f"inv({signature(e.x, depth - 1)})"
+    if isinstance(e, Select):
+        return f"σ[{e.pred}]({signature(e.x, depth - 1)})"
+    if isinstance(e, Agg):
+        return (f"Γ[{e.fn.value},{e.dim.value}]"
+                f"({signature(e.x, depth - 1)})")
+    if isinstance(e, Join):
+        return (f"({signature(e.a, depth - 1)}⋈[{e.pred}]"
+                f"{signature(e.b, depth - 1)})")
+    return e._label()
+
+
 def transform_bottom_up(e: Expr, f: Callable[[Expr], Optional[Expr]]) -> Expr:
     """Rebuild the tree bottom-up, applying ``f`` at each node (None = keep)."""
     ch = e.children()

@@ -3,12 +3,15 @@
 Each rule is a function ``Expr -> Optional[Expr]`` returning a rewritten node
 or None when it does not fire. Rules only fire when they are valid (the paper
 states validity side conditions, e.g. Rule 5 needs a square matrix, Rule 24/25
-need β≠0); the optimizer applies them bottom-up to a fixed point and keeps the
-rewrite only when the cost model agrees it is cheaper.
+need β≠0). Two optimizers consume them: the greedy oracle applies them
+bottom-up to a fixed point under a whole-plan flop gate, and the memo search
+treats each rule as an *alternative generator* (``iter_alternatives``) whose
+candidates are costed through the physical layer and kept per-subtree only
+when they win.
 """
 from __future__ import annotations
 
-from typing import Callable, List, Optional
+from typing import Callable, Iterator, List, Optional, Tuple
 
 from repro.core.expr import (
     Agg, AggDim, AggFn, ElemWise, EWOp, Expr, Join, Leaf, MatMul, MatScalar,
@@ -334,6 +337,59 @@ def rule_scalar_fold(e: Expr) -> Optional[Expr]:
     return None
 
 
+# ---------------------------------------------------------------------------
+# Rule-as-generator contract (memo search).
+#
+# The memo optimizer does not commit rewrites greedily: every rule is an
+# *alternative generator* that yields zero or more candidate rewrites of
+# the root of ``e``, each tagged with the rule name; the search costs
+# every candidate through the physical layer and keeps the cheapest group
+# member. Plain ``Expr -> Optional[Expr]`` rules are lifted inline by
+# ``iter_alternatives`` (their validity side conditions carry over
+# unchanged — a rule that does not fire yields nothing); genuinely
+# multi-output generators (e.g. matmul reassociation, which is an
+# equivalence not an improvement, so it must never be greedily committed)
+# are written natively and listed in ``SEARCH_ONLY_GENERATORS``.
+# ---------------------------------------------------------------------------
+
+AltGen = Callable[[Expr], Iterator[Tuple[str, Expr]]]
+
+
+def gen_matmul_reassociate(e: Expr) -> Iterator[Tuple[str, Expr]]:
+    """(A×B)×C ↔ A×(B×C): both rotations, always shape-valid.
+
+    Greedy application would loop; under the memo search the group's
+    ``seen`` set closes the orbit and the cost model picks the cheapest
+    association (the bounded local form of the matrix-chain DP).
+    """
+    if not isinstance(e, MatMul):
+        return
+    if isinstance(e.a, MatMul):
+        yield "gen_matmul_reassociate", MatMul(e.a.a, MatMul(e.a.b, e.b))
+    if isinstance(e.b, MatMul):
+        yield "gen_matmul_reassociate", MatMul(MatMul(e.a, e.b.a), e.b.b)
+
+
+def iter_alternatives(e: Expr, extra: Tuple[AltGen, ...] = (),
+                      rules: Optional[List[Rule]] = None,
+                      search_only: bool = True
+                      ) -> Iterator[Tuple[str, Expr]]:
+    """All candidate rewrites of the root of ``e`` (the generator contract).
+
+    ``rules`` overrides the rule set (None → ``ALL_RULES``; the memo
+    search passes ``[]`` when pushdowns are disabled), ``search_only``
+    gates the native equivalence generators (reassociation — chain
+    reordering in search form).
+    """
+    for rule in (ALL_RULES if rules is None else rules):
+        out = rule(e)
+        if out is not None:
+            yield rule.__name__, out
+    gens = (SEARCH_ONLY_GENERATORS if search_only else []) + list(extra)
+    for gen in gens:
+        yield from gen(e)
+
+
 ALL_RULES: List[Rule] = [
     rule_select_merge,
     rule_select_transpose,
@@ -352,5 +408,15 @@ ALL_RULES: List[Rule] = [
     rule_extrema_transpose,
     rule_extrema_matscalar,
     rule_double_transpose,
+    # (A×B)ᵀ = Bᵀ×Aᵀ enables transpose-side pushdowns but can REGRESS
+    # (two factor-sized transposes replace one output-sized one): under
+    # the greedy fixpoint only the whole-plan gate protects against it —
+    # all-or-nothing — while the memo search accepts/rejects it per
+    # subtree on physical cost. New to ALL_RULES in the memo PR.
+    rule_transpose_matmul,
     rule_scalar_fold,
+]
+
+SEARCH_ONLY_GENERATORS: List[AltGen] = [
+    gen_matmul_reassociate,
 ]

@@ -61,12 +61,14 @@ def _select_jit_safe(e: Select) -> bool:
 
 class _Builder:
     def __init__(self, mode: str, block_size: int, use_bloom: bool,
-                 kernel_backend: Optional[str], n_workers: int):
+                 kernel_backend: Optional[str], n_workers: int,
+                 cost_only: bool = False):
         self.mode = mode
         self.block_size = block_size
         self.use_bloom = use_bloom
         self.kernel_backend = kernel_backend
         self.n_workers = n_workers
+        self.cost_only = cost_only
         self.nodes: List[P.PhysicalNode] = []
         self.memo: Dict[tuple, int] = {}
 
@@ -160,7 +162,7 @@ class _Builder:
         if kernel is not None:
             backend = self._backend(kernel)
         partition = None
-        if self.n_workers > 1:
+        if self.n_workers > 1 and not self.cost_only:
             partition = partmod.plan_join_static(
                 e.pred, costmod.size_of(e.a), costmod.size_of(e.b),
                 self.n_workers).choice
@@ -177,6 +179,8 @@ class _Builder:
             partition=partition)
 
     def _backend(self, kernel: str) -> Optional[str]:
+        if self.cost_only:
+            return None
         from repro.kernels import registry
         return registry.planned_backend(kernel, self.kernel_backend)
 
@@ -184,12 +188,21 @@ class _Builder:
 def build_plan(e: Expr, *, mode: str = "sparse", block_size: int = 256,
                use_bloom: bool = True,
                kernel_backend: Optional[str] = None,
-               n_workers: Optional[int] = None) -> P.PhysicalPlan:
-    """Lower (already-optimized) logical plan ``e`` into a physical DAG."""
+               n_workers: Optional[int] = None,
+               cost_only: bool = False) -> P.PhysicalPlan:
+    """Lower (already-optimized) logical plan ``e`` into a physical DAG.
+
+    ``cost_only=True`` is the optimizer's dry-lowering mode: the DAG is
+    built purely to be costed (``core.cost.physical_cost``), so kernel
+    backend resolution and the per-join static partition annotation are
+    skipped — strategy selection, hash-consing and the scheme DP (the
+    inputs of the cost) still run, and nothing is ever staged.
+    """
     assert mode in ("sparse", "dense")
     if n_workers is None:
         n_workers = jax.device_count()
-    b = _Builder(mode, block_size, use_bloom, kernel_backend, n_workers)
+    b = _Builder(mode, block_size, use_bloom, kernel_backend, n_workers,
+                 cost_only=cost_only)
     root = b.lower(e)
     plan = P.PhysicalPlan(
         nodes=tuple(b.nodes), root=root, mode=mode, block_size=block_size,

@@ -51,13 +51,33 @@ def _annotations(n: PhysicalNode) -> str:
     return ("  [" + " ".join(parts) + "]") if parts else ""
 
 
+def render_optimizer(opt) -> List[str]:
+    """EXPLAIN section for the optimizer's decision: search mode, fired
+    rules, chosen cost, and the top rejected alternatives with their
+    ``cost=flops/comm/nnz`` breakdown (``core.optimizer.Alternative``)."""
+    fired = ", ".join(opt.fired) or "(none)"
+    head = f"== optimizer: search={opt.search} | fired: {fired}"
+    if opt.physical is not None:
+        head += (f" | cost={opt.physical.total:.4g}"
+                 f" (flops/comm/nnz {opt.physical.breakdown()})"
+                 f" from {opt.physical_original.total:.4g}")
+    lines = [head + " =="]
+    if opt.alternatives:
+        lines.append(f"== rejected alternatives"
+                     f" (top {len(opt.alternatives)}) ==")
+        for alt in opt.alternatives:
+            lines.append(f"  {alt.describe()}")
+    return lines
+
+
 def render(plan: PhysicalPlan,
-           measured_bytes: Optional[int] = None) -> str:
+           measured_bytes: Optional[int] = None,
+           opt=None) -> str:
     header = (f"== physical plan: mode={plan.mode} workers={plan.n_workers}"
               f" | {plan.n_nodes} ops from {plan.logical_nodes} logical"
               f" nodes ({plan.shared_nodes} shared)"
               f" | est {plan.est_flops:.4g} flops ==")
-    lines = [header]
+    lines = ([] if opt is None else render_optimizer(opt)) + [header]
     if plan.total_comm_est:
         comm = (f"== comm: predicted {plan.total_comm_est:.4g}"
                 f" entries moved"

@@ -70,14 +70,22 @@ class MaskInfo:
 # ---------------------------------------------------------------------------
 
 class _Leaves:
-    """Host views of the catalog leaves, fetched lazily and at most once."""
+    """Host views of the catalog leaves, fetched lazily and at most once.
+
+    An instance may be shared across *many* plans over the same catalog —
+    the memo optimizer costs every candidate rewrite of one query against
+    a single ``Leaves`` (``core.cost.physical_cost``), so each array,
+    block mask and join-capacity scan is fetched once per optimize()
+    call, not once per candidate. The capacity memo is therefore keyed by
+    the join's logical expression, which is stable across plans (physical
+    op ids are not)."""
 
     def __init__(self, env: Dict[str, BlockMatrix], block_size: int):
         self.env = env
         self.bs = block_size
         self._arrays: Dict[str, np.ndarray] = {}
         self._masks: Dict[str, np.ndarray] = {}
-        self.caps: Dict[int, Optional[int]] = {}  # per-join capacity memo
+        self.caps: Dict[object, Optional[int]] = {}  # per-join capacity memo
 
     def array(self, node: P.PhysicalNode) -> np.ndarray:
         name = node.expr.name
@@ -299,8 +307,8 @@ def _join_capacity(node: P.PhysicalNode, plan: P.PhysicalPlan, ch: list,
                    leaves: _Leaves,
                    prof: SparsityProfile) -> Optional[int]:
     """Static buffer capacity for a COO join, or None (host-only)."""
-    if node.op_id in leaves.caps:
-        return leaves.caps[node.op_id]
+    if node.expr in leaves.caps:
+        return leaves.caps[node.expr]
     limit = device_cap_limit()
     a_node = plan.node(node.children[0])
     b_node = plan.node(node.children[1])
@@ -316,7 +324,7 @@ def _join_capacity(node: P.PhysicalNode, plan: P.PhysicalPlan, ch: list,
     from repro.core.joins_device import round_capacity
     # rounding avoids zero-size buffers and hair-trigger retraces
     out = None if cap > limit else round_capacity(cap)
-    leaves.caps[node.op_id] = out
+    leaves.caps[node.expr] = out
     return out
 
 
@@ -324,14 +332,16 @@ def _join_capacity(node: P.PhysicalNode, plan: P.PhysicalPlan, ch: list,
 # Annotation: write the results onto the plan + re-gate cost decisions.
 # ---------------------------------------------------------------------------
 
-def annotate(plan: P.PhysicalPlan,
-             env: Dict[str, BlockMatrix]) -> Dict[int, MaskInfo]:
+def annotate(plan: P.PhysicalPlan, env: Dict[str, BlockMatrix],
+             leaves: Optional[_Leaves] = None) -> Dict[int, MaskInfo]:
     """Propagate masks/nnz and refresh the plan's cost gates in place.
 
     Idempotent per leaf-mask fingerprint; called by the staged sparse
-    executor and by ``explain(physical=True)`` on sparse-tier sessions.
+    executor, by ``explain(physical=True)`` on sparse-tier sessions, and
+    by the optimizer's cost-only dry-lowerings (which pass a shared
+    ``leaves`` so candidate plans reuse one set of host views).
     """
-    leaves = _Leaves(env, plan.block_size)
+    leaves = leaves or _Leaves(env, plan.block_size)
     key = fingerprint(plan, env, leaves)
     if plan._mask_key == key and plan._mask_infos is not None:
         return plan._mask_infos
@@ -415,6 +425,10 @@ def _side_caps(node: P.PhysicalNode, plan: P.PhysicalPlan, ch: list,
 
     return (one(node.children[0], ch[0], skips[0]),
             one(node.children[1], ch[1], skips[1]))
+
+
+# Public name for the shared-leaf-view cache (see _Leaves docstring).
+Leaves = _Leaves
 
 
 def stageable(plan: P.PhysicalPlan) -> bool:

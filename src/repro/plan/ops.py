@@ -104,6 +104,12 @@ class PhysicalPlan:
         default=None, repr=False, compare=False)
     _mask_infos: Optional[Any] = dataclasses.field(
         default=None, repr=False, compare=False)
+    # scheme-propagation cache (repro.plan.schemes.annotate): the DP is a
+    # pure function of the immutable node structure + worker count, so
+    # one assignment per plan — cost-only dry-lowerings and EXPLAIN reuse
+    # it instead of re-running the DP per call
+    _scheme_assignment: Optional[Any] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def n_nodes(self) -> int:

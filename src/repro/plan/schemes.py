@@ -308,7 +308,12 @@ def _own_comm(node: P.PhysicalNode, plan: P.PhysicalPlan,
 def annotate(plan: P.PhysicalPlan) -> SchemeAssignment:
     """Run the propagation and write the results onto the plan's nodes
     (``scheme`` / ``in_schemes`` / ``comm_est``). Called by the builder
-    for multi-worker plans; idempotent."""
+    for multi-worker plans; idempotent — the DP depends only on the
+    immutable node structure and worker count, so the assignment is
+    computed once per plan and cached (repeated EXPLAIN / cost-only
+    lowerings skip the DP)."""
+    if plan._scheme_assignment is not None:
+        return plan._scheme_assignment
     assignment = propagate(plan)
     for node in plan.nodes:
         ns = assignment.nodes[node.op_id]
@@ -316,4 +321,5 @@ def annotate(plan: P.PhysicalPlan) -> SchemeAssignment:
         node.in_schemes = ns.in_schemes
         node.comm_est = ns.comm_entries
     plan.total_comm_est = assignment.total_comm
+    plan._scheme_assignment = assignment
     return assignment

@@ -1,0 +1,304 @@
+"""Memo-search optimizer: keep-best-subtree, memo keys, generators,
+physical costing, and the never-worse-than-greedy guarantee.
+
+The headline regression test pins the fix for the greedy oracle's
+all-or-nothing cost gate (core/optimizer.py): greedy discards *every*
+fired rewrite whenever the rewritten plan as a whole costs more than the
+input — even when a beneficial prefix (e.g. a selection pushdown) is
+dragged down by one unrelated regressing rule (e.g. a transpose-of-matmul
+distribution over huge factors). The memo search costs each subtree's
+alternatives independently, so it keeps the win and rejects the
+regression.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    MergeFn, Session, optimize, optimize_greedy, optimize_memo,
+    physical_cost,
+)
+from repro.core import cost as costmod
+from repro.core.expr import (
+    Agg, AggDim, AggFn, ElemWise, EWOp, Join, Leaf, MatMul, MatScalar,
+    Select, Transpose, expr_key, signature,
+)
+from repro.core import rules as rulesmod
+from repro.core.predicates import parse_join, parse_select
+
+
+def _gate_trip_expr():
+    """A plan with a beneficial branch and a larger regressing branch.
+
+    Win branch: σ over X×Y (K=128) — pushdown saves ≈2K³ flops.
+    Regress branch: (U×V)ᵀ with U 1×n, V n×4 — rule_transpose_matmul
+    rewrites to Vᵀ×Uᵀ, adding ≈5n transpose entries with n ≫ K³,
+    so greedy's whole-plan gate trips and discards both rewrites.
+    """
+    K = 128
+    X, Y = Leaf("X", (K, K), 1.0), Leaf("Y", (K, K), 1.0)
+    win = Select(MatMul(X, Y), parse_select("RID>=0 AND RID<=3 AND CID=0"))
+    n = 1 << 22
+    U, V = Leaf("U", (1, n), 1.0), Leaf("V", (n, 4), 1.0)
+    regress = Transpose(MatMul(U, V))
+    return ElemWise(win, regress, EWOp.MUL)
+
+
+def _contains(e, pred):
+    if pred(e):
+        return True
+    return any(_contains(c, pred) for c in e.children())
+
+
+# ---------------------------------------------------------------------------
+# The all-or-nothing gate fix (keep-best-subtree).
+# ---------------------------------------------------------------------------
+
+def test_greedy_gate_is_all_or_nothing():
+    e = _gate_trip_expr()
+    res = optimize_greedy(e)
+    # both rules fired during the fixpoint...
+    assert "rule_select_matmul" in res.fired
+    assert "rule_transpose_matmul" in res.fired
+    # ...but the final plan regressed, so the gate discarded everything —
+    # including the beneficial selection pushdown
+    assert expr_key(res.plan) == expr_key(e)
+    assert res.optimized_cost == res.original_cost
+
+
+def test_memo_keeps_beneficial_prefix_rejects_regression():
+    e = _gate_trip_expr()
+    res = optimize_memo(e)
+    # the selection pushdown survived: some matmul now has a Select child
+    assert _contains(res.plan, lambda x: isinstance(x, MatMul) and any(
+        isinstance(c, Select) for c in x.children()))
+    # the regressing transpose distribution was rejected per-subtree:
+    # (U×V)ᵀ is still a Transpose over a MatMul
+    assert _contains(res.plan, lambda x: isinstance(x, Transpose)
+                     and isinstance(x.x, MatMul))
+    assert "rule_select_matmul" in res.fired
+    assert "rule_transpose_matmul" not in res.fired
+    # strictly cheaper than what greedy settled for
+    greedy = optimize_greedy(e)
+    assert res.physical.total < physical_cost(greedy.plan).total
+
+
+def test_memo_never_worse_than_greedy_fixed_corpus():
+    X = Leaf("X", (48, 36), 0.3)
+    B = Leaf("B", (48, 36), 0.5)
+    sq = Leaf("S", (36, 36), 1.0)
+    corpus = [
+        Agg(MatMul(Transpose(X), X), AggFn.SUM, AggDim.DIAG),
+        Select(MatMul(X, Transpose(B)), parse_select("RID=5")),
+        Agg(MatScalar(sq, EWOp.ADD, 1.5), AggFn.NNZ, AggDim.ROW),
+        Agg(Transpose(ElemWise(X, B, EWOp.ADD)), AggFn.SUM, AggDim.COL),
+        _gate_trip_expr(),
+        MatMul(MatMul(sq, sq), Leaf("v", (36, 1), 1.0)),
+    ]
+    for e in corpus:
+        memo = optimize_memo(e)
+        greedy = optimize_greedy(e)
+        assert memo.physical.total \
+            <= physical_cost(greedy.plan).total + 1e-6, signature(e)
+        assert memo.optimized_cost <= memo.original_cost + 1e-6
+
+
+def test_memo_finds_chain_order():
+    # A×B×v: the reassociation generator + chain DP find the vector-first
+    # order without the greedy pipeline's dedicated reorder pass
+    A = Leaf("A", (40, 40), 1.0)
+    B = Leaf("B", (40, 40), 1.0)
+    v = Leaf("v", (40, 1), 1.0)
+    res = optimize_memo(MatMul(MatMul(A, B), v))
+    root = res.plan
+    assert isinstance(root, MatMul)
+    assert isinstance(root.b, MatMul)          # A×(B×v)
+    assert root.b.shape == (40, 1)
+
+
+# ---------------------------------------------------------------------------
+# Memo keys and the generator contract.
+# ---------------------------------------------------------------------------
+
+def test_expr_key_merge_fn_identity():
+    """Joins group by the MergeFn itself: the search substitutes group
+    members for one another, and behavioural equality of callables is
+    undecidable (probe fingerprints collide), so only a *shared* MergeFn
+    instance puts two joins in one group."""
+    a, b = Leaf("A", (8, 8), 0.5), Leaf("B", (8, 8), 0.5)
+    pred = parse_join("RID=RID AND CID=CID")
+    mul = MergeFn("mul", lambda x, y: x * y)
+    assert expr_key(Join(a, b, pred, mul)) \
+        == expr_key(Join(a, b, pred, mul))      # shared instance: 1 group
+    other = MergeFn("mul", lambda x, y: x * y)  # equal lambda, new closure
+    assert expr_key(Join(a, b, pred, mul)) \
+        != expr_key(Join(a, b, pred, other))    # conservative split
+    j3 = Join(a, b, pred, MergeFn("add", lambda x, y: x + y))
+    assert expr_key(Join(a, b, pred, mul)) != expr_key(j3)
+
+
+def test_expr_key_distinguishes_same_named_merge_fns():
+    """Two joins that differ ONLY in the merge callable (same name) must
+    not share a memo group — the search would substitute one subtree for
+    the other and silently compute wrong values."""
+    pred = parse_join("RID=RID AND CID=CID")
+    f_add = MergeFn("f", lambda x, y: x + y)
+    f_mul = MergeFn("f", lambda x, y: x * y)
+    a, b = Leaf("A", (8, 8), 0.5), Leaf("B", (8, 8), 0.5)
+    assert expr_key(Join(a, b, pred, f_add)) \
+        != expr_key(Join(a, b, pred, f_mul))
+    # end-to-end: optimized ≡ naive on plans mixing same-named merges —
+    # including a pair built to agree on any small set of numeric probe
+    # points (x+y vs where(x<10, x+y, 0) over values ≥ 10), which is why
+    # grouping must use callable identity, not a fingerprint
+    import jax.numpy as jnp
+    f_gated = MergeFn("f", lambda x, y: jnp.where(x < 10, x + y, 0.0))
+    rng = np.random.default_rng(5)
+    s = Session(block_size=8)
+    A = s.load((np.abs(rng.normal(size=(16, 16))) + 10)
+               .astype(np.float32), "A")
+    B = s.load(rng.normal(size=(16, 16)).astype(np.float32), "B")
+    for f2 in (f_mul, f_gated):
+        q = A.join(B, "RID=RID AND CID=CID", f_add).emul(
+            A.join(B, "RID=RID AND CID=CID", f2)).sum("a")
+        naive = np.asarray(q.collect(optimize=False).value)
+        opt = np.asarray(q.collect(optimize=True).value)
+        np.testing.assert_allclose(opt, naive, rtol=1e-4)
+
+
+def test_memo_honors_enable_flags():
+    # pushdowns disabled: the memo search must not rewrite a pushdown-only
+    # plan (the flags are part of the exported optimize() contract)
+    X = Leaf("X", (48, 36), 1.0)
+    B = Leaf("B", (48, 36), 1.0)
+    e = Select(MatMul(X, Transpose(B)), parse_select("RID=5"))
+    res = optimize(e, enable_pushdown=False, search="memo")
+    assert expr_key(res.plan) == expr_key(e)
+    assert res.fired == []
+    # chain reorder disabled: a 3-chain stays left-associated
+    A = Leaf("A", (40, 40), 1.0)
+    v = Leaf("v", (40, 1), 1.0)
+    chain = MatMul(MatMul(A, A), v)
+    kept = optimize(chain, enable_chain_reorder=False, search="memo")
+    assert expr_key(kept.plan) == expr_key(chain)
+
+
+def test_expr_key_distinguishes_params():
+    a = Leaf("A", (8, 8), 0.5)
+    assert expr_key(MatScalar(a, EWOp.ADD, 1.0)) \
+        != expr_key(MatScalar(a, EWOp.ADD, 2.0))
+    assert expr_key(Transpose(a)) != expr_key(a)
+    assert expr_key(Leaf("A", (8, 8), 0.5)) == expr_key(a)
+
+
+def test_rules_as_generators_yield_tagged_candidates():
+    a = Leaf("A", (8, 8), 0.5)
+    e = Transpose(Transpose(a))
+    alts = dict(rulesmod.iter_alternatives(e))
+    assert alts["rule_double_transpose"] is a
+    # reassociation yields both rotations at a 3-chain root
+    chain = MatMul(MatMul(a, a), a)
+    names = [n for n, _ in rulesmod.iter_alternatives(chain)]
+    assert "gen_matmul_reassociate" in names
+
+
+def test_generator_lift_preserves_validity_conditions():
+    # Eq. 23 is gated on dense inputs; the lifted generator must not fire
+    # on a sparse one (validity carries over from the rule verbatim)
+    sparse_leaf = Leaf("S", (8, 8), 0.2)
+    e = Agg(MatScalar(sparse_leaf, EWOp.ADD, 2.0), AggFn.MAX, AggDim.ALL)
+    names = [n for n, _ in rulesmod.iter_alternatives(e)]
+    assert "rule_extrema_matscalar" not in names
+
+
+# ---------------------------------------------------------------------------
+# physical_cost: the unified objective.
+# ---------------------------------------------------------------------------
+
+def test_physical_cost_breakdown_single_worker():
+    X = Leaf("X", (12, 8), 0.25)
+    c = physical_cost(Agg(MatMul(Transpose(X), X), AggFn.SUM, AggDim.DIAG),
+                      n_workers=1)
+    assert c.comm == 0.0                      # no mesh, no movement
+    assert c.flops > 0 and c.nnz > 0
+    assert c.total == pytest.approx(
+        c.flops + costmod.MATERIALIZE_FLOPS_PER_ENTRY * c.nnz)
+
+
+def test_physical_cost_sees_comm_on_mesh():
+    mul = MergeFn("mul", lambda x, y: x * y)
+    j = Join(Leaf("A", (512, 512), 0.5), Leaf("B", (512, 512), 0.5),
+             parse_join("VAL=VAL"), mul)
+    single = physical_cost(j, n_workers=1)
+    mesh = physical_cost(j, n_workers=4)
+    assert single.comm == 0.0
+    assert mesh.comm > 0.0
+    assert mesh.total > single.total
+
+
+def test_physical_cost_uses_session_masks():
+    # a session with a half-empty leaf: the certified nnz bound must beat
+    # the logical dense estimate, and costing must not mutate any staging
+    rng = np.random.default_rng(0)
+    s = Session(block_size=8)
+    v = rng.normal(size=(16, 16)).astype(np.float32)
+    v[8:, :] = 0.0                            # bottom half: dead blocks
+    s.load(v.astype(np.float32), "X")
+    x = Leaf("X", (16, 16), 1.0)              # logical claim: dense
+    e = ElemWise(x, x, EWOp.MUL)
+    blind = physical_cost(e, n_workers=1)
+    seeing = physical_cost(e, s, n_workers=1)
+    assert seeing.nnz < blind.nnz             # mask certified the dead half
+
+
+def test_session_search_modes_agree_numerically():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(24, 24)).astype(np.float32)
+    outs = {}
+    for search in ("memo", "greedy"):
+        s = Session(block_size=8, search=search)
+        X = s.load(x, "X")
+        q = X.t().multiply(X).select("RID=3")
+        outs[search] = np.asarray(q.collect().value)
+    np.testing.assert_allclose(outs["memo"], outs["greedy"], rtol=1e-5)
+    with pytest.raises(ValueError):
+        Session(search="bogus")
+
+
+def test_optimize_result_cached_per_search():
+    rng = np.random.default_rng(2)
+    s = Session(block_size=8)
+    X = s.load(rng.normal(size=(16, 16)).astype(np.float32), "X")
+    q = X.t().multiply(X)
+    r1 = s.optimize_result(q.plan)
+    r2 = s.optimize_result(q.plan)
+    assert r1 is r2                           # memoized per (plan, search)
+    r3 = s.optimize_result(q.plan, search="greedy")
+    assert r3 is not r1 and r3.search == "greedy"
+
+
+def test_rejected_alternatives_recorded_and_ranked():
+    res = optimize_memo(_gate_trip_expr())
+    assert res.alternatives, "gate expr must produce rejected candidates"
+    deltas = [a.delta for a in res.alternatives]
+    # ranked by the regression the rejection avoided, biggest first
+    assert deltas == sorted(deltas, reverse=True)
+    assert all(d > 0 for d in deltas)
+    joined = " ".join("+".join(a.rules) for a in res.alternatives)
+    assert "rule_transpose_matmul" in joined
+    # describe() carries the cost columns EXPLAIN renders
+    assert "flops/comm/nnz" in res.alternatives[0].describe()
+
+
+def test_memo_budget_bounds_costings():
+    # a 6-term matmul chain has a large reassociation orbit; the budget
+    # must cut exploration short (it bounds frontier expansion — members
+    # already generated still get costed, so a small overshoot is fine)
+    terms = [Leaf(f"M{i}", (32, 32), 1.0) for i in range(6)]
+    e = terms[0]
+    for t in terms[1:]:
+        e = MatMul(e, t)
+    wide = optimize(e, search="memo", budget=512)
+    tight = optimize(e, search="memo", budget=8)
+    assert tight.iterations < wide.iterations
+    # even exhausted, the root guard keeps the answer sane
+    assert tight.optimized_cost <= tight.original_cost + 1e-6

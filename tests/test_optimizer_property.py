@@ -1,9 +1,14 @@
 """Property-based invariants of the whole optimizer (hypothesis).
 
-For RANDOM plans over random matrices:
-  1. the optimized plan evaluates to the same result as the naive plan;
-  2. the estimated cost never regresses;
-  3. sparse-tier execution equals dense-tier execution.
+For RANDOM plans over random matrices — pipelines of unary/binary matrix
+ops, selections, mid-pipeline aggregations, inverses of well-conditioned
+factors and sparse-tier overlay joins:
+  1. the optimized plan evaluates to the same result as the naive plan,
+     under BOTH search modes (memo / greedy) and BOTH engines (dag / tree);
+  2. the estimated cost never regresses (per search mode's own model);
+  3. the memo search never returns a plan with higher physical cost than
+     the greedy oracle (the acceptance bound of the memo refactor);
+  4. sparse-tier execution equals dense-tier execution.
 """
 import numpy as np
 import pytest
@@ -11,10 +16,12 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings, strategies as st
 
-from repro.core import Session
+from repro.core import MergeFn, Session, physical_cost
 from repro.core.api import Matrix
 
 DIMS = (12, 16)
+
+_MUL = MergeFn("mul", lambda x, y: x * y)
 
 
 def _rand_matrix(draw, rng_seed, density):
@@ -33,12 +40,12 @@ def plans(draw):
     a = s.load(_rand_matrix(draw, seed, density))
     b = s.load(_rand_matrix(draw, seed + 1, density))
     mx = a
-    square = False
     n_ops = draw(st.integers(1, 4))
     for _ in range(n_ops):
         op = draw(st.sampled_from(
             ["t", "scalar_add", "scalar_mul", "ewadd", "ewmul", "matmul",
-             "select_row", "select_val"]))
+             "select_row", "select_val", "agg_mid", "inverse_mul",
+             "overlay_join"]))
         if op == "t":
             mx = mx.t()
         elif op == "scalar_add":
@@ -60,28 +67,77 @@ def plans(draw):
                 mx = mx.select(f"RID={draw(st.integers(0, hi))}")
         elif op == "select_val":
             mx = mx.select("VAL>0")
+        elif op == "agg_mid":
+            # mid-pipeline aggregation: later ops keep composing over the
+            # (m,1)/(1,n) vector wherever shapes still match
+            mx = mx.agg(draw(st.sampled_from(["sum", "nnz"])),
+                        draw(st.sampled_from(["r", "c"])))
+        elif op == "inverse_mul":
+            # multiply by the inverse of a fresh well-conditioned factor
+            k = mx.plan.shape[1]
+            if k >= 2:
+                rng = np.random.default_rng(seed + 17)
+                w = (np.eye(k) * k
+                     + 0.1 * rng.normal(size=(k, k))).astype(np.float32)
+                mx = mx.multiply(s.load(w).inverse())
+        elif op == "overlay_join" and mx.plan.shape == b.plan.shape \
+                and len(mx.plan.shape) == 2:
+            # sparse-tier direct overlay join (order-2 output)
+            mx = mx.join(b, "RID=RID AND CID=CID", _MUL)
     fn = draw(st.sampled_from(["sum", "nnz", "avg", "max", "min"]))
     dim = draw(st.sampled_from(["r", "c", "a"]))
     return mx.agg(fn, dim)
 
 
-@settings(max_examples=60, deadline=None,
+@pytest.mark.parametrize("search", ["memo", "greedy"])
+@settings(max_examples=40, deadline=None,
           suppress_health_check=[HealthCheck.too_slow,
                                  HealthCheck.data_too_large])
 @given(mx=plans())
-def test_optimized_equals_naive(mx: Matrix):
+def test_optimized_equals_naive(mx: Matrix, search: str):
+    mx.session.search = search
     naive = np.asarray(mx.collect(optimize=False).value)
     opt = np.asarray(mx.collect(optimize=True).value)
     np.testing.assert_allclose(opt, naive, atol=1e-3, rtol=1e-3)
 
 
-@settings(max_examples=60, deadline=None,
+@settings(max_examples=30, deadline=None,
           suppress_health_check=[HealthCheck.too_slow,
                                  HealthCheck.data_too_large])
 @given(mx=plans())
-def test_cost_monotone(mx: Matrix):
-    res = mx.optimized_plan()
+def test_engines_agree_after_optimize(mx: Matrix):
+    """DAG engine ≡ tree-walk oracle on the *optimized* plan, for both
+    search modes (search on/off relative to the memo refactor)."""
+    for search in ("memo", "greedy"):
+        mx.session.search = search
+        dag = np.asarray(mx.collect(optimize=True, engine="dag").value)
+        tree = np.asarray(mx.collect(optimize=True, engine="tree").value)
+        np.testing.assert_allclose(dag, tree, atol=1e-3, rtol=1e-3,
+                                   err_msg=f"search={search}")
+
+
+@pytest.mark.parametrize("search", ["memo", "greedy"])
+@settings(max_examples=40, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow,
+                                 HealthCheck.data_too_large])
+@given(mx=plans())
+def test_cost_monotone(mx: Matrix, search: str):
+    res = mx.optimized_plan(search=search)
     assert res.optimized_cost <= res.original_cost + 1e-6
+
+
+@settings(max_examples=40, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow,
+                                 HealthCheck.data_too_large])
+@given(mx=plans())
+def test_memo_never_worse_than_greedy(mx: Matrix):
+    """Acceptance bound of the memo refactor: on the session's own
+    physical cost model the memo plan is never costlier than the greedy
+    oracle's plan (the oracle is a seeded root candidate)."""
+    memo = mx.optimized_plan(search="memo")
+    greedy = mx.optimized_plan(search="greedy")
+    oracle = physical_cost(greedy.plan, mx.session)
+    assert memo.physical.total <= oracle.total + 1e-6
 
 
 @settings(max_examples=30, deadline=None,

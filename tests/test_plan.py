@@ -252,6 +252,28 @@ def test_explain_physical_golden_bloom_join_with_schemes():
     assert got == expected
 
 
+def test_explain_physical_golden_optimizer_section():
+    """EXPLAIN heads the plan with the optimizer's decision record: the
+    fired rules and the top rejected alternatives, each with its
+    cost=flops/comm/nnz breakdown and the Δ the rejection avoided."""
+    s = _session(n_workers=1)
+    from repro.core.api import Matrix
+    x = Matrix(s, Leaf("X", s.env["X"].shape, 0.3))
+    got = x.t().multiply(x).trace().explain(physical=True)
+    expected = textwrap.dedent("""\
+        == optimizer: search=memo | fired: rule_sum_matmul, rule_double_transpose, rule_double_transpose | cost=123.9 (flops/comm/nnz 99.84/0/24.04) from 1276 ==
+        == rejected alternatives (top 3) ==
+          Δ+1152 cost=1276 (flops/comm/nnz 1009/0/266.4) via (unrewritten): Γ[sum,d]((…ᵀ×X))
+          Δ+644 cost=644 (flops/comm/nnz 512/0/132) via (unrewritten): Xᵀᵀ
+          Δ+644 cost=743.8 (flops/comm/nnz 588.8/0/155) via (unrewritten): (…ᵀᵀ*X)
+        == physical plan: mode=sparse workers=1 | 3 ops from 4 logical nodes (1 shared) | est 99.84 flops ==
+        #2 Agg[sum,a]  shape=(1, 1) sp=1 cost=23.04  [nnz≈1 mask=1/1]
+          #1 ElemWise[*]  shape=(16, 16) sp=0.09 cost=76.8  [nnz≈66 mask=4/4]
+            #0 Leaf[X]  shape=(16, 16) sp=0.3 cost=0  [nnz≈66 mask=4/4]
+            #0 Leaf[X] (shared)""")
+    assert got == expected
+
+
 def test_explain_api_surface():
     s = _session()
     from repro.core.api import Matrix
@@ -260,5 +282,7 @@ def test_explain_api_surface():
     out = g.add(g).explain(physical=True)
     assert "physical plan" in out
     assert "(shared)" in out
+    assert "optimizer: search=memo" in out
     logical = g.add(g).explain()
     assert "optimized" in logical
+    assert "search=memo" in logical
