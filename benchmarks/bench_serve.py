@@ -1,0 +1,53 @@
+"""Serving-tier benchmark: sustained multi-query qps with/without CSE.
+
+Workload: the 1000-client synthetic serving stream from
+``repro.serve.workload`` — 10 analytical templates over one shared
+catalog, zipf template popularity, 8 tenants, 2 worker threads. The row
+pair pins the tentpole claim: cross-query CSE (shared physical DAG +
+versioned result cache) must sustain >= 1.5x the qps of the same engine
+with CSE disabled, at lower tail latency. A warmup pass runs each
+distinct plan once in both configurations so the timed phase measures
+steady-state serving, not one-time XLA compilation.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import Session
+from repro.serve import workload as wl
+
+N_CLIENTS = 1000
+N_TENANTS = 8
+N_THREADS = 2
+DIM = 48
+
+
+def run(rng) -> None:
+    session = Session(block_size=8)
+    mats = wl.synthetic_catalog(session, rng, n=DIM)
+    templates = wl.query_templates(mats)
+    stream = wl.client_stream(rng, templates, n_clients=N_CLIENTS,
+                              n_tenants=N_TENANTS)
+
+    results = {}
+    for cse in (True, False):
+        r = wl.run_workload(session, stream, cse=cse, n_threads=N_THREADS)
+        results[cse] = r
+        tag = "cse" if cse else "nocse"
+        st = r["stats"]
+        us_per_query = r["wall_s"] * 1e6 / r["queries"]
+        row(f"serve_{tag}_qps", us_per_query,
+            f"qps={r['qps']:.0f} clients={r['queries']} "
+            f"tenants={N_TENANTS} threads={N_THREADS}")
+        row(f"serve_{tag}_p50", r["p50_ms"] * 1e3,
+            f"p99_ms={r['p99_ms']:.2f}")
+        sharing = (f"root_hits={st['root_hits']} "
+                   f"shared_nodes={st['inter_query_cse_nodes']} "
+                   f"leaf_scans={st['leaf_scans']}/{st['leaf_refs']} "
+                   f"batches={st['batches']}") if cse else "cse disabled"
+        row(f"serve_{tag}_sharing", None, sharing)
+
+    ratio = results[True]["qps"] / max(results[False]["qps"], 1e-9)
+    row("serve_cse_speedup", None,
+        f"qps_ratio={ratio:.2f}x (acceptance: >=1.5x)")

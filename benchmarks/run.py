@@ -13,6 +13,9 @@ Prints ``name,us_per_call,derived`` CSV rows. Mapping to the paper:
                           (plan cost + end-to-end wall clock)
     bench_sparse_join   — (beyond paper) host-COO vs device-resident
                           sparse joins + staged block-skip ratio
+    bench_serve         — (beyond paper) multi-query serving tier:
+                          sustained qps + p50/p99 with/without
+                          cross-query CSE (1k-client zipf workload)
     bench_dist_comm     — (beyond paper) per-join jit vs whole-plan SPMD
                           (needs XLA_FLAGS=--xla_force_host_platform_
                           device_count=8 on CPU)
@@ -78,14 +81,14 @@ def main() -> None:
         bench_agg_gram, bench_cross_product, bench_dist_comm,
         bench_join_dims, bench_join_entries, bench_join_single,
         bench_optimizer, bench_plan_cse, bench_pnmf, bench_roofline,
-        bench_select_lr, bench_sparse_join,
+        bench_select_lr, bench_serve, bench_sparse_join,
     )
     from benchmarks.common import ROWS, row
 
     mods = [bench_agg_gram, bench_select_lr, bench_cross_product,
             bench_join_dims, bench_join_single, bench_join_entries,
             bench_pnmf, bench_plan_cse, bench_optimizer, bench_sparse_join,
-            bench_dist_comm, bench_roofline]
+            bench_serve, bench_dist_comm, bench_roofline]
     only, json_path = _parse_args(sys.argv[1:])
     print("name,us_per_call,derived")
     t0 = time.time()

@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.core import executor as exmod
 from repro.core import optimizer as optmod
+from repro.core.plancache import VersionedLRU
 from repro import plan as planmod
 from repro.core.expr import (
     Agg, AggDim, AggFn, ElemWise, EWOp, Expr, Inverse, Join, Leaf, MatMul,
@@ -63,8 +64,8 @@ class Session:
         self._auto = 0
         self._mesh = None
         self._env_version = 0
-        self._plan_cache: Dict[tuple, "planmod.PhysicalPlan"] = {}
-        self._opt_cache: Dict[tuple, optmod.OptimizeResult] = {}
+        self._plan_cache = VersionedLRU(_PLAN_CACHE_LIMIT)
+        self._opt_cache = VersionedLRU(_PLAN_CACHE_LIMIT)
 
     @property
     def workers(self) -> int:
@@ -139,13 +140,8 @@ class Session:
         search = search or self.search
         key = (plan, search, self._env_version, self.mode,
                self.block_size, self.use_bloom, self.n_workers)
-        hit = self._opt_cache.get(key)
-        if hit is None:
-            hit = optmod.optimize(plan, search=search, session=self)
-            while len(self._opt_cache) >= _PLAN_CACHE_LIMIT:
-                self._opt_cache.pop(next(iter(self._opt_cache)))
-            self._opt_cache[key] = hit
-        return hit
+        return self._opt_cache.get_or_create(
+            key, lambda: optmod.optimize(plan, search=search, session=self))
 
     def _optimized(self, plan: Expr) -> Expr:
         return self.optimize_result(plan).plan
@@ -153,28 +149,27 @@ class Session:
     def physical_plan(self, plan: Expr) -> "planmod.PhysicalPlan":
         """Lower ``plan`` (assumed already optimized) into a physical DAG.
 
-        Plans are cached per (expr, mode, block_size, use_bloom,
-        n_workers, mesh, kernel backend env): logical ``Expr`` trees are
-        frozen and hash structurally, and plan annotations derive from the
-        expression plus those settings — so repeated ``collect()`` calls
-        reuse the DAG (and its staged jit / SPMD function). The mesh is in
-        the key because the staged SPMD program and the scheme annotations
-        are topology-specific. The cache is bounded: sessions issuing
-        parameter-varying queries evict oldest-first.
+        Plans are cached per (expr, catalog version, mode, block_size,
+        use_bloom, n_workers, mesh, kernel backend env): logical ``Expr``
+        trees are frozen and hash structurally, and plan annotations
+        derive from the expression, those settings, *and the bound leaf
+        data* — mask/nnz propagation and COO capacity sizing read the
+        catalog, so the key carries ``_env_version`` (bumped by ``load``)
+        and a leaf rebind replans instead of serving a plan staged
+        against stale masks. The mesh is in the key because the staged
+        SPMD program and the scheme annotations are topology-specific.
+        The cache is a bounded LRU (``core.plancache.VersionedLRU``):
+        sessions issuing parameter-varying queries evict
+        least-recently-used first.
         """
         import os
-        key = (plan, self.mode, self.block_size, self.use_bloom,
-               self.n_workers, self._mesh_key(),
+        key = (plan, self._env_version, self.mode, self.block_size,
+               self.use_bloom, self.n_workers, self._mesh_key(),
                os.environ.get("REPRO_KERNEL_BACKEND"))
-        cached = self._plan_cache.get(key)
-        if cached is None:
-            cached = planmod.build_plan(
+        return self._plan_cache.get_or_create(
+            key, lambda: planmod.build_plan(
                 plan, mode=self.mode, block_size=self.block_size,
-                use_bloom=self.use_bloom, n_workers=self.n_workers)
-            while len(self._plan_cache) >= _PLAN_CACHE_LIMIT:
-                self._plan_cache.pop(next(iter(self._plan_cache)))
-            self._plan_cache[key] = cached
-        return cached
+                use_bloom=self.use_bloom, n_workers=self.n_workers))
 
 
 # Bounds the per-session physical-plan cache (each dense-tier entry can pin

@@ -180,7 +180,8 @@ class _Memo:
 
     def __init__(self, session, budget: int,
                  enable_chain_reorder: bool = True,
-                 enable_pushdown: bool = True):
+                 enable_pushdown: bool = True,
+                 cost_cache: Optional[Dict] = None, leaves=None):
         self.session = session
         self.budget = budget
         # generator configuration for iter_alternatives: pushdowns off →
@@ -191,10 +192,16 @@ class _Memo:
                       else ())
         self.costings = 0
         self.best: Dict[tuple, Tuple[Expr, Tuple[str, ...]]] = {}
-        self._cost: Dict[tuple, costmod.PhysicalCost] = {}
+        # ``cost_cache`` may be shared across optimize() calls (the serving
+        # tier passes one per catalog version): overlapping queries then
+        # cost each shared subexpression's candidates once, not once per
+        # query. Keys are ``expr_key`` — structural, so only valid while
+        # the catalog the costs were measured against is unchanged.
+        self._cost: Dict[tuple, costmod.PhysicalCost] = \
+            cost_cache if cost_cache is not None else {}
         self.alts: List[Alternative] = []   # rejected members, all groups
-        self.leaves = None
-        if session is not None:
+        self.leaves = leaves
+        if session is not None and leaves is None:
             from repro.plan import masks as masksmod
             self.leaves = masksmod.Leaves(session.env, session.block_size)
 
@@ -324,10 +331,19 @@ def optimize_greedy(e: Expr, enable_chain_reorder: bool = True,
 
 def optimize_memo(e: Expr, session=None, budget: int = DEFAULT_BUDGET,
                   enable_chain_reorder: bool = True,
-                  enable_pushdown: bool = True) -> OptimizeResult:
-    """Memoized cost-based search (see module docstring)."""
+                  enable_pushdown: bool = True,
+                  cost_cache: Optional[Dict] = None,
+                  leaves=None) -> OptimizeResult:
+    """Memoized cost-based search (see module docstring).
+
+    ``cost_cache`` / ``leaves`` may be shared across calls over one
+    unchanged catalog (the serving tier's cross-query optimizer state):
+    physical-cost lowerings and catalog fetches for subexpressions that
+    overlap between queries then happen once per catalog version.
+    """
     greedy = optimize_greedy(e, enable_chain_reorder, enable_pushdown)
-    memo = _Memo(session, budget, enable_chain_reorder, enable_pushdown)
+    memo = _Memo(session, budget, enable_chain_reorder, enable_pushdown,
+                 cost_cache=cost_cache, leaves=leaves)
     best, fired = _search(e, memo)
     # root guard: the greedy oracle's answer and the unrewritten input are
     # candidates too, so the memo result is never costlier than either.
@@ -353,14 +369,19 @@ def optimize_memo(e: Expr, session=None, budget: int = DEFAULT_BUDGET,
 
 def optimize(e: Expr, enable_chain_reorder: bool = True,
              enable_pushdown: bool = True, *, search: str = "memo",
-             session=None, budget: int = DEFAULT_BUDGET) -> OptimizeResult:
+             session=None, budget: int = DEFAULT_BUDGET,
+             cost_cache: Optional[Dict] = None,
+             leaves=None) -> OptimizeResult:
     """Optimize ``e``; ``search`` picks the memo search (default) or the
     greedy oracle. ``session`` makes the memo search cost candidates
-    against the session's mode, block size, mesh and bound leaf data."""
+    against the session's mode, block size, mesh and bound leaf data;
+    ``cost_cache``/``leaves`` optionally share that costing state across
+    calls over one catalog version (see ``optimize_memo``)."""
     if search == "greedy":
         return optimize_greedy(e, enable_chain_reorder, enable_pushdown)
     if search != "memo":
         raise ValueError(f"unknown search {search!r}")
     return optimize_memo(e, session=session, budget=budget,
                          enable_chain_reorder=enable_chain_reorder,
-                         enable_pushdown=enable_pushdown)
+                         enable_pushdown=enable_pushdown,
+                         cost_cache=cost_cache, leaves=leaves)

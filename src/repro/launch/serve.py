@@ -1,6 +1,17 @@
-"""Batched serving driver: prefill a batch of prompts, decode N tokens.
+"""Serving drivers: the relational query-serving tier and the LM demo.
 
-CPU-scale usage (reduced config):
+Relational serving (the paper's premise — queries over big matrix data as
+a service): spin a ``ServeEngine`` over a synthetic catalog and serve a
+zipf multi-tenant workload, printing sustained qps and p50/p99 latency
+with and without cross-query CSE:
+
+    PYTHONPATH=src python -m repro.launch.serve --relational \
+        --clients 1000 --dim 48 --threads 2
+
+LM serving (the seed scaffolding, kept): prefill a batch of prompts and
+decode N tokens through the hoisted compiled steps (``repro.serve.step``
+— compiled once per (cfg, shape), decode caches donated):
+
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
         --batch 4 --prompt-len 64 --new-tokens 32
 """
@@ -16,19 +27,35 @@ import numpy as np
 from repro.configs import get_config, reduced
 from repro.models import api as mapi
 from repro.models.module import init_params
-from repro.serve.step import make_decode_step, make_prefill_step
+from repro.serve.step import compiled_decode, compiled_prefill
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-1.7b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--new-tokens", type=int, default=32)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+def serve_relational(args) -> int:
+    from repro.core import Session
+    from repro.serve import workload as wl
 
+    rng = np.random.default_rng(args.seed)
+    session = Session(block_size=args.block_size)
+    mats = wl.synthetic_catalog(session, rng, n=args.dim)
+    templates = wl.query_templates(mats)
+    stream = wl.client_stream(rng, templates, n_clients=args.clients,
+                              n_tenants=args.tenants)
+    print(f"[serve] catalog={list(mats)} templates={len(templates)} "
+          f"clients={args.clients} tenants={args.tenants}")
+    for cse in (True, False):
+        r = wl.run_workload(session, stream, cse=cse,
+                            n_threads=args.threads,
+                            tenant_max_inflight=args.tenant_inflight)
+        st = r["stats"]
+        print(f"[serve] cse={'on ' if cse else 'off'} "
+              f"qps={r['qps']:.0f} p50={r['p50_ms']:.2f}ms "
+              f"p99={r['p99_ms']:.2f}ms root_hits={st['root_hits']} "
+              f"shared_nodes={st['inter_query_cse_nodes']} "
+              f"leaf_scans={st['leaf_scans']}/{st['leaf_refs']}")
+    return 0
+
+
+def serve_lm(args) -> int:
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = reduced(cfg)
@@ -48,8 +75,10 @@ def main(argv=None) -> int:
             rng.normal(size=(b, cfg.n_img_tokens, cfg.img_embed_dim)),
             jnp.float32)
 
-    prefill = jax.jit(make_prefill_step(cfg, max_seq))
-    decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
+    # hoisted compiled steps: a second driver run in the same process (or
+    # any repro.serve.step.generate call) reuses these executables
+    prefill = compiled_prefill(cfg, max_seq)
+    decode = compiled_decode(cfg, donate=True)
 
     t0 = time.time()
     logits, caches = prefill(params, batch)
@@ -71,6 +100,32 @@ def main(argv=None) -> int:
           f"throughput {(b*(n_new-1))/max(t_decode,1e-9):.1f} tok/s")
     print(f"[serve] sample tokens: {np.asarray(gen[0, :16])}")
     return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--relational", action="store_true",
+                    help="serve the relational matrix-query workload "
+                         "instead of the LM demo")
+    ap.add_argument("--seed", type=int, default=0)
+    # relational serving
+    ap.add_argument("--clients", type=int, default=1000)
+    ap.add_argument("--tenants", type=int, default=8)
+    ap.add_argument("--dim", type=int, default=48)
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--threads", type=int, default=2)
+    ap.add_argument("--tenant-inflight", type=int, default=None,
+                    help="admission: max queued+running per tenant")
+    # LM serving
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    args = ap.parse_args(argv)
+    if args.relational:
+        return serve_relational(args)
+    return serve_lm(args)
 
 
 if __name__ == "__main__":

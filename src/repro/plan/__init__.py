@@ -13,7 +13,9 @@ communication cost model. ``execute_plan`` evaluates the DAG topologically
 with memoization (jit-staging the whole plan on the dense tier); ``render``
 is the physical EXPLAIN.
 """
-from repro.plan.builder import build_plan
+from repro.plan.builder import (
+    SharedBuildState, SharedLowering, build_plan, lower_shared,
+)
 from repro.plan.executor import (
     PlanExecutor, execute_plan, staged_collective_bytes,
 )
@@ -22,7 +24,8 @@ from repro.plan.ops import PhysicalNode, PhysicalPlan
 from repro.plan.schemes import SchemeAssignment, propagate, transpose_scheme
 
 __all__ = [
-    "build_plan", "execute_plan", "PlanExecutor", "PhysicalNode",
-    "PhysicalPlan", "render", "staged_collective_bytes",
+    "build_plan", "execute_plan", "lower_shared", "PlanExecutor",
+    "PhysicalNode", "PhysicalPlan", "render", "SharedBuildState",
+    "SharedLowering", "staged_collective_bytes",
     "SchemeAssignment", "propagate", "transpose_scheme",
 ]

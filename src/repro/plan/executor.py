@@ -69,12 +69,19 @@ class PlanExecutor:
     """
 
     def __init__(self, env: Dict[str, BlockMatrix], stage_jit: bool = True,
-                 mesh=None):
+                 mesh=None, node_cache=None):
         self.env = env
         self.stage_jit = stage_jit
         self.mesh = mesh
+        # cross-query materialized-result cache (the serving tier's
+        # inter-query CSE): an object with ``get(plan, node)`` →
+        # result-or-None and ``put(plan, node, result)``. Sharing happens
+        # per *node*, so it composes with the eager path only — ``run``
+        # skips jit staging when a cache is installed.
+        self.node_cache = node_cache
         self.stats: Dict[str, int] = {
-            "node_evals": 0, "matmuls": 0, "masked_matmuls": 0, "joins": 0,
+            "node_evals": 0, "node_reuses": 0, "matmuls": 0,
+            "masked_matmuls": 0, "joins": 0,
             "staged": 0, "staged_spmd": 0, "staged_sparse": 0,
             "staged_sparse_spmd": 0, "sparse_fallbacks": 0,
             "sparse_overflows": 0, "blocks_skipped": 0, "blocks_total": 0,
@@ -82,7 +89,7 @@ class PlanExecutor:
 
     # -- public ---------------------------------------------------------------
     def run(self, plan: P.PhysicalPlan) -> Result:
-        if self.stage_jit and plan.jit_safe:
+        if self.stage_jit and plan.jit_safe and self.node_cache is None:
             spmd = self.mesh is not None and plan.n_workers > 1
             mesh = self.mesh if spmd else None
             if plan.mode == "dense":
@@ -96,9 +103,17 @@ class PlanExecutor:
     def _run_eager(self, plan: P.PhysicalPlan) -> Result:
         results: Dict[int, Result] = {}
         for node in plan.nodes:
+            if self.node_cache is not None:
+                hit = self.node_cache.get(plan, node)
+                if hit is not None:
+                    results[node.op_id] = hit
+                    self.stats["node_reuses"] += 1
+                    continue
             args = [results[c] for c in node.children]
             results[node.op_id] = self._eval(plan, node, args)
             self.stats["node_evals"] += 1
+            if self.node_cache is not None:
+                self.node_cache.put(plan, node, results[node.op_id])
         return results[plan.root]
 
     def _eval(self, plan: P.PhysicalPlan, node: P.PhysicalNode,

@@ -1,0 +1,470 @@
+"""Multi-query serving engine: one session, thousands of concurrent queries.
+
+The paper's premise is relational query processing as a *service* over big
+matrix data; its Spark prototype amortizes optimization across a query
+stream. This module is that serving tier for the jax engine:
+
+* ``submit()`` accepts a stream of logical plans (``Expr`` or ``Matrix``)
+  from many clients/tenants and returns a ``Ticket`` (an async handle);
+  worker threads drain the queue in batches.
+* **Cross-query CSE** — all queries over one catalog version lower into a
+  single shared hash-consing arena (``plan.builder.SharedBuildState``):
+  a subplan any earlier query lowered resolves to the same shared node
+  id, and a shared LRU of materialized node results
+  (``core.plancache.VersionedLRU``) turns that structural sharing into
+  *execution* sharing — overlapping pipelines compute each shared
+  subexpression once per catalog version. A whole-query repeat is a root
+  hit and returns without touching the evaluator.
+* **Shared optimizer state** — optimize results, the memo search's
+  physical-cost cache and the catalog ``Leaves`` view are shared per
+  catalog version, so overlapping queries cost each shared candidate
+  subexpression once (``core.optimizer.optimize(cost_cache=...,
+  leaves=...)``).
+* **Batched leaf scans** — before a drained batch executes, the distinct
+  leaves referenced by the whole batch are materialized once each into
+  the shared result cache (one scan per leaf per batch, not per query).
+* **Versioned caches** — every shared structure is keyed by the catalog
+  version (bumped by ``Session.load``): a leaf rebind retires the old
+  arena/results atomically for *new* queries while in-flight queries keep
+  the version they started against. Invariant: every cache keyed on
+  data-dependent annotations carries the catalog version.
+* **Admission control** — a bounded queue plus per-tenant in-flight
+  quotas reject excess load at submit time (``AdmissionError``), and
+  per-tenant result-cache budgets stop one tenant's churn from flushing
+  another's hot entries.
+
+``cse=False`` disables the shared result cache and the arena reuse, and
+executes each query standalone through the session's (jit-staged) path —
+the baseline the serving benchmark compares against.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Dict, List, Optional
+
+from repro.core import optimizer as optmod
+from repro.core.expr import Expr
+from repro.core.plancache import VersionedLRU
+from repro.plan import builder as buildermod
+from repro.plan.executor import PlanExecutor
+from repro.plan import ops as P
+
+
+class AdmissionError(RuntimeError):
+    """Submit rejected by admission control (queue full / tenant over
+    budget). Clients are expected to back off and retry."""
+
+
+class Ticket:
+    """Async handle for one submitted query."""
+
+    def __init__(self, query: Expr, tenant: str):
+        self.query = query
+        self.tenant = tenant
+        self.submitted_at = time.perf_counter()
+        self.started_at: Optional[float] = None
+        self.finished_at: Optional[float] = None
+        self.reused_nodes = 0        # node results served from the shared LRU
+        self.evaluated_nodes = 0
+        self._done = threading.Event()
+        self._result = None
+        self._error: Optional[BaseException] = None
+
+    # -- worker side ----------------------------------------------------------
+    def _finish(self, result=None, error: Optional[BaseException] = None):
+        self._result, self._error = result, error
+        self.finished_at = time.perf_counter()
+        self._done.set()
+
+    # -- client side ----------------------------------------------------------
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def result(self, timeout: Optional[float] = None):
+        if not self._done.wait(timeout):
+            raise TimeoutError("query still in flight")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+    @property
+    def latency(self) -> float:
+        """Submit→finish wall seconds (meaningful once ``done()``)."""
+        return (self.finished_at or time.perf_counter()) - self.submitted_at
+
+
+@dataclasses.dataclass
+class _VersionState:
+    """All cross-query shared state for one (catalog version × settings):
+    the hash-consing arena, an immutable catalog snapshot, per-version
+    optimizer caches, and the extracted-plan cache. Retired wholesale when
+    the catalog version moves on (old instances keep serving their
+    in-flight queries until unreferenced)."""
+
+    key: tuple
+    env: Dict                       # catalog snapshot (name → BlockMatrix)
+    shared: buildermod.SharedBuildState
+    leaves: object                  # plan.masks.Leaves over the snapshot
+    cost_cache: Dict = dataclasses.field(default_factory=dict)
+    lock: threading.Lock = dataclasses.field(default_factory=threading.Lock)
+    opt_cache: Optional[VersionedLRU] = None
+    plans: Optional[VersionedLRU] = None       # optimized expr → SharedLowering
+    plan_locks: Dict[int, threading.Lock] = \
+        dataclasses.field(default_factory=dict)
+
+
+class _NodeCache:
+    """Adapter from the executor's ``get(plan, node)/put`` seam to the
+    engine's shared result LRU, keyed by (version-state key, shared node
+    id) and attributed to the submitting tenant for budget accounting."""
+
+    def __init__(self, results: VersionedLRU, state_key: tuple, tenant: str):
+        self._results = results
+        self._state_key = state_key
+        self._tenant = tenant
+
+    def get(self, plan: P.PhysicalPlan, node: P.PhysicalNode):
+        return self._results.get((self._state_key,
+                                  node.meta.get("shared_id", node.op_id)))
+
+    def put(self, plan: P.PhysicalPlan, node: P.PhysicalNode, result):
+        self._results.put(
+            (self._state_key, node.meta.get("shared_id", node.op_id)),
+            result, tenant=self._tenant)
+
+
+class ServeEngine:
+    """Serving front end over one ``Session`` (see module docstring).
+
+    Parameters
+    ----------
+    n_threads: worker threads draining the submit queue.
+    max_queue: admission bound on queued tickets (global).
+    tenant_max_inflight: admission bound on queued+running per tenant.
+    cse: enable the cross-query shared arena + result cache.
+    result_entries / tenant_result_budget: shared result LRU capacity and
+        the per-tenant entry budget within it.
+    batch_max: tickets drained per worker wakeup (the leaf-scan batching
+        window).
+    """
+
+    def __init__(self, session, *, n_threads: int = 2, max_queue: int = 1024,
+                 tenant_max_inflight: Optional[int] = None, cse: bool = True,
+                 result_entries: int = 1024,
+                 tenant_result_budget: Optional[int] = None,
+                 plan_entries: int = 128, opt_entries: int = 256,
+                 batch_max: int = 32, keep_versions: int = 2):
+        self.session = session
+        self.cse = cse
+        self.max_queue = max_queue
+        self.tenant_max_inflight = tenant_max_inflight
+        self.batch_max = batch_max
+        self._plan_entries = plan_entries
+        self._opt_entries = opt_entries
+        self._results = VersionedLRU(result_entries,
+                                     tenant_budget=tenant_result_budget)
+        self._states: "deque[_VersionState]" = deque(maxlen=keep_versions)
+        self._queue: "deque[Ticket]" = deque()
+        self._inflight: Dict[str, int] = {}
+        self._lock = threading.Lock()
+        self._work = threading.Condition(self._lock)
+        self._stop = False
+        self.stats: Dict[str, int] = {
+            "submitted": 0, "completed": 0, "errors": 0,
+            "rejected_queue": 0, "rejected_tenant": 0,
+            "root_hits": 0, "node_reuses": 0, "node_evals": 0,
+            "inter_query_cse_nodes": 0, "arena_nodes": 0,
+            "leaf_scans": 0, "leaf_refs": 0, "batches": 0,
+        }
+        self._threads = [
+            threading.Thread(target=self._worker_loop, daemon=True,
+                             name=f"serve-worker-{i}")
+            for i in range(n_threads)]
+        for t in self._threads:
+            t.start()
+
+    # -- lifecycle ------------------------------------------------------------
+    def close(self) -> None:
+        with self._lock:
+            self._stop = True
+            self._work.notify_all()
+        for t in self._threads:
+            t.join()
+
+    def __enter__(self) -> "ServeEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- client API -----------------------------------------------------------
+    def submit(self, query, tenant: str = "default") -> Ticket:
+        """Enqueue one logical plan (an ``Expr`` or a ``core.api.Matrix``);
+        raises ``AdmissionError`` when the queue or the tenant budget is
+        full."""
+        expr = query.plan if hasattr(query, "plan") else query
+        if not isinstance(expr, Expr):
+            raise TypeError(f"not a logical plan: {type(query)}")
+        ticket = Ticket(expr, tenant)
+        with self._lock:
+            if self._stop:
+                raise RuntimeError("engine is closed")
+            if len(self._queue) >= self.max_queue:
+                self.stats["rejected_queue"] += 1
+                raise AdmissionError(
+                    f"queue full ({self.max_queue} tickets)")
+            if (self.tenant_max_inflight is not None
+                    and self._inflight.get(tenant, 0)
+                    >= self.tenant_max_inflight):
+                self.stats["rejected_tenant"] += 1
+                raise AdmissionError(
+                    f"tenant {tenant!r} over budget "
+                    f"({self.tenant_max_inflight} in flight)")
+            self._inflight[tenant] = self._inflight.get(tenant, 0) + 1
+            self.stats["submitted"] += 1
+            self._queue.append(ticket)
+            self._work.notify()
+        return ticket
+
+    def run(self, query, tenant: str = "default",
+            timeout: Optional[float] = None):
+        """Submit and wait (the synchronous convenience path)."""
+        return self.submit(query, tenant=tenant).result(timeout)
+
+    def drain(self, timeout: float = 60.0) -> None:
+        """Block until every submitted ticket has finished."""
+        deadline = time.perf_counter() + timeout
+        while time.perf_counter() < deadline:
+            with self._lock:
+                if not self._queue and not any(self._inflight.values()):
+                    return
+            time.sleep(0.001)
+        raise TimeoutError("engine did not drain")
+
+    # -- version-state management ---------------------------------------------
+    def _state_key(self, version: int) -> tuple:
+        import os
+        s = self.session
+        return (version, s.mode, s.block_size, s.use_bloom, s.n_workers,
+                s._mesh_key(), os.environ.get("REPRO_KERNEL_BACKEND"))
+
+    def _current_state(self) -> _VersionState:
+        """The shared state for the catalog as of *now*. The version is
+        read on both sides of the snapshot so a concurrent ``load`` can
+        never produce a state whose snapshot mixes versions."""
+        from repro.plan import masks as masksmod
+        s = self.session
+        while True:
+            v = s._env_version
+            key = self._state_key(v)
+            with self._lock:
+                for st in self._states:
+                    if st.key == key:
+                        return st
+            env = dict(s.env)
+            if s._env_version != v:
+                continue                      # rebind raced the snapshot
+            st = _VersionState(
+                key=key, env=env,
+                shared=buildermod.SharedBuildState(
+                    mode=s.mode, block_size=s.block_size,
+                    use_bloom=s.use_bloom, n_workers=s.workers),
+                leaves=masksmod.Leaves(env, s.block_size),
+                opt_cache=VersionedLRU(self._opt_entries),
+                plans=VersionedLRU(self._plan_entries))
+            with self._lock:
+                for other in self._states:
+                    if other.key == key:      # another thread won the race
+                        return other
+                self._states.append(st)
+            return st
+
+    # -- worker side ----------------------------------------------------------
+    def _worker_loop(self) -> None:
+        while True:
+            with self._lock:
+                while not self._queue and not self._stop:
+                    self._work.wait()
+                if self._stop and not self._queue:
+                    return
+                batch: List[Ticket] = []
+                while self._queue and len(batch) < self.batch_max:
+                    batch.append(self._queue.popleft())
+                self.stats["batches"] += 1
+            state = self._current_state()
+            lowered = [self._plan_ticket(state, t) for t in batch]
+            if self.cse:
+                self._prewarm_leaves(state, [p for p in lowered
+                                             if p is not None])
+            for ticket, lw in zip(batch, lowered):
+                try:
+                    if lw is not None:
+                        self._execute(state, ticket, lw)
+                except BaseException as e:      # propagate to the client
+                    ticket._finish(error=e)
+                    with self._lock:
+                        self.stats["errors"] += 1
+                finally:
+                    with self._lock:
+                        self._inflight[ticket.tenant] -= 1
+
+    def _plan_ticket(self, state: _VersionState, ticket: Ticket
+                     ) -> Optional[buildermod.SharedLowering]:
+        """Optimize + lower one ticket against the shared per-version
+        state; on failure the ticket is finished with the error and None
+        is returned."""
+        s = self.session
+        try:
+            ticket.started_at = time.perf_counter()
+            opt = state.opt_cache.get_or_create(
+                (ticket.query, s.search),
+                lambda: optmod.optimize(
+                    ticket.query, search=s.search, session=s,
+                    cost_cache=state.cost_cache, leaves=state.leaves),
+                tenant=ticket.tenant)
+            if not self.cse:
+                # standalone lowering: no shared arena, fresh/ per-expr
+                # plan via the session cache (jit-staged execution path)
+                plan = state.plans.get_or_create(
+                    opt.plan, lambda: buildermod.build_plan(
+                        opt.plan, mode=s.mode, block_size=s.block_size,
+                        use_bloom=s.use_bloom, n_workers=s.workers),
+                    tenant=ticket.tenant)
+                return buildermod.SharedLowering(
+                    plan=plan, root_shared_id=-1, reused_nodes=0,
+                    new_nodes=plan.n_nodes)
+            def _lower():
+                with state.lock:
+                    lw = buildermod.lower_shared(state.shared, opt.plan)
+                with self._lock:
+                    self.stats["inter_query_cse_nodes"] += lw.reused_nodes
+                    self.stats["arena_nodes"] = len(state.shared.nodes)
+                return lw
+            return state.plans.get_or_create(opt.plan, _lower,
+                                             tenant=ticket.tenant)
+        except BaseException as e:
+            ticket._finish(error=e)
+            with self._lock:
+                self.stats["errors"] += 1
+            return None
+
+    def _prewarm_leaves(self, state: _VersionState,
+                        lowered: List[buildermod.SharedLowering]) -> None:
+        """Batched leaf scans: materialize each distinct leaf the batch
+        references once into the shared result cache."""
+        from repro.core.executor import leaf_value
+        seen = set()
+        for lw in lowered:
+            for node in lw.plan.nodes:
+                if node.kind != P.LEAF:
+                    continue
+                key = (state.key, node.meta["shared_id"])
+                with self._lock:
+                    self.stats["leaf_refs"] += 1
+                if key in seen or self._results.get(key) is not None:
+                    continue
+                seen.add(key)
+                val = leaf_value(node.expr, state.env, state.shared.block_size)
+                self._results.put(key, val)
+                with self._lock:
+                    self.stats["leaf_scans"] += 1
+
+    # Minimum fraction of a plan's estimated flops that cached subresults
+    # must cover before the engine prefers per-node eager reuse over the
+    # jit-staged path (eager pays per-node dispatch overhead; staged pays
+    # recomputing the overlap).
+    EAGER_REUSE_MIN_COVERAGE = 0.5
+
+    def _cse_coverage(self, state: _VersionState,
+                      plan: P.PhysicalPlan) -> float:
+        """Fraction of ``plan``'s estimated flops already materialized in
+        the shared result cache: a cached node covers its whole subtree
+        (evaluation stops there). Leaf hits contribute nothing — leaves
+        carry no flops, and re-scanning one is cheap."""
+        cached = {
+            n.op_id for n in plan.nodes
+            if n.kind != P.LEAF
+            and (state.key, n.meta["shared_id"]) in self._results}
+        if not cached:
+            return 0.0
+        need = set()
+        stack = [plan.root]
+        while stack:
+            i = stack.pop()
+            if i in need or i in cached:
+                continue
+            need.add(i)
+            stack.extend(plan.node(i).children)
+        total = plan.est_flops
+        if total <= 0:
+            return 1.0
+        return 1.0 - sum(plan.node(i).est_flops for i in need) / total
+
+    def _execute(self, state: _VersionState, ticket: Ticket,
+                 lw: buildermod.SharedLowering) -> None:
+        import jax
+        if self.cse:
+            root_key = (state.key,
+                        lw.plan.node(lw.plan.root).meta["shared_id"])
+            hit = self._results.get(root_key)
+            if hit is not None:
+                with self._lock:
+                    self.stats["root_hits"] += 1
+                    self.stats["completed"] += 1
+                ticket.reused_nodes = lw.plan.n_nodes
+                ticket._finish(result=hit)
+                return
+            if (self._cse_coverage(state, lw.plan)
+                    >= self.EAGER_REUSE_MIN_COVERAGE):
+                # substantial overlap with earlier queries: evaluate
+                # eagerly, reusing every shared node result and publishing
+                # the new ones (inter-query subexpression sharing)
+                ex = PlanExecutor(
+                    state.env,
+                    node_cache=_NodeCache(self._results, state.key,
+                                          ticket.tenant))
+                out = ex.run(lw.plan)
+            else:
+                # cold pipeline: run the fast (jit-staged) path once and
+                # publish its root, which seeds subplan reuse for every
+                # later query that embeds this one
+                out, ex = self._run_staged(state, lw)
+                self._results.put(root_key, out, tenant=ticket.tenant)
+        else:
+            out, ex = self._run_staged(state, lw)
+        value = getattr(out, "value", out)
+        try:
+            jax.block_until_ready(value)       # latency = results on host
+        except Exception:
+            pass                               # host-side results (COO etc.)
+        ticket.reused_nodes = ex.stats["node_reuses"]
+        ticket.evaluated_nodes = ex.stats["node_evals"]
+        with self._lock:
+            self.stats["node_reuses"] += ex.stats["node_reuses"]
+            self.stats["node_evals"] += ex.stats["node_evals"]
+            self.stats["completed"] += 1
+        ticket._finish(result=out)
+
+    def _run_staged(self, state: _VersionState,
+                    lw: buildermod.SharedLowering):
+        """Standalone (jit-staged when possible) execution of one plan.
+        The staged compile caches live on the shared ``PhysicalPlan``, so
+        execution is serialized per plan object across worker threads."""
+        ex = PlanExecutor(state.env, mesh=self.session.mesh)
+        with self._lock:
+            lock = state.plan_locks.setdefault(id(lw.plan),
+                                               threading.Lock())
+        with lock:
+            out = ex.run(lw.plan)
+        return out, ex
+
+    # -- introspection --------------------------------------------------------
+    def snapshot(self) -> Dict[str, object]:
+        """Stats snapshot (engine counters + shared-cache hit rates)."""
+        with self._lock:
+            out = dict(self.stats)
+        out["result_cache"] = dataclasses.asdict(self._results.stats)
+        return out

@@ -1,4 +1,12 @@
-"""Serving steps: batched prefill and single-token decode (greedy/sampled)."""
+"""Serving steps: batched prefill and single-token decode (greedy/sampled).
+
+The jitted step functions are hoisted into a module-level LRU keyed on
+``(kind, cfg, max_seq/greedy, donate)`` so repeated serving calls —
+``generate`` invocations, driver restarts within one process — reuse the
+compiled executables instead of re-wrapping (and re-tracing) per call.
+``trace_count`` exposes how many times each cached step actually traced,
+so tests can pin the no-recompile contract.
+"""
 from __future__ import annotations
 
 from typing import Any, Dict, Optional, Tuple
@@ -7,19 +15,30 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.plancache import VersionedLRU
 from repro.models import api as mapi
 
+# Compiled prefill/decode steps, LRU-bounded: each entry pins jit traces,
+# and a long-lived serving process cycling through many (cfg, max_seq)
+# shapes must not grow without bound.
+_STEP_CACHE = VersionedLRU(capacity=16)
+_TRACE_COUNTS: Dict[tuple, int] = {}
 
-def make_prefill_step(cfg: ModelConfig, max_seq: int):
+
+def make_prefill_step(cfg: ModelConfig, max_seq: int, _trace_key=None):
     def prefill_step(params, batch: Dict[str, jnp.ndarray]):
+        if _trace_key is not None:
+            _TRACE_COUNTS[_trace_key] = _TRACE_COUNTS.get(_trace_key, 0) + 1
         logits, caches = mapi.prefill(params, cfg, batch, max_seq)
         return logits[:, -1:], caches
 
     return prefill_step
 
 
-def make_decode_step(cfg: ModelConfig, greedy: bool = True):
+def make_decode_step(cfg: ModelConfig, greedy: bool = True, _trace_key=None):
     def decode_step(params, caches, token: jnp.ndarray, pos: jnp.ndarray):
+        if _trace_key is not None:
+            _TRACE_COUNTS[_trace_key] = _TRACE_COUNTS.get(_trace_key, 0) + 1
         logits, caches = mapi.decode_step(params, cfg, caches, token, pos)
         next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         return logits, next_tok[:, None], caches
@@ -27,13 +46,47 @@ def make_decode_step(cfg: ModelConfig, greedy: bool = True):
     return decode_step
 
 
+def compiled_prefill(cfg: ModelConfig, max_seq: int):
+    """The jitted prefill step for ``(cfg, max_seq)``, compiled at most
+    once per process (modulo LRU eviction)."""
+    key = ("prefill", cfg, max_seq)
+    return _STEP_CACHE.get_or_create(
+        key, lambda: jax.jit(make_prefill_step(cfg, max_seq,
+                                               _trace_key=key)))
+
+
+def compiled_decode(cfg: ModelConfig, greedy: bool = True,
+                    donate: bool = False):
+    """The jitted decode step for ``cfg``; ``donate=True`` donates the KV
+    caches (the serving driver's steady-state path — each step's cache
+    buffers are dead after the next step consumes them)."""
+    key = ("decode", cfg, greedy, donate)
+    return _STEP_CACHE.get_or_create(
+        key, lambda: jax.jit(
+            make_decode_step(cfg, greedy, _trace_key=key),
+            donate_argnums=(1,) if donate else ()))
+
+
+def trace_count(kind: str, cfg: ModelConfig, *rest) -> int:
+    """How many times the cached ``kind`` step for ``cfg`` has traced."""
+    return _TRACE_COUNTS.get((kind, cfg) + rest, 0)
+
+
 def generate(params, cfg: ModelConfig, prompt: jnp.ndarray, n_new: int,
              max_seq: int, enc_batch: Optional[Dict] = None
              ) -> jnp.ndarray:
-    """Greedy generation loop (example-app path, jit-per-step)."""
+    """Greedy generation loop (example-app path).
+
+    Uses the hoisted compiled steps: calling ``generate`` repeatedly for
+    the same ``(cfg, max_seq)`` reuses the compiled prefill/decode instead
+    of re-wrapping ``jax.jit`` per call (which retraced every invocation).
+    Donation stays off on this example path so it runs warning-free on
+    backends without buffer donation (CPU); the serving driver opts in
+    via ``compiled_decode(donate=True)``.
+    """
     batch = dict(enc_batch or {}, tokens=prompt)
-    prefill = jax.jit(make_prefill_step(cfg, max_seq))
-    step = jax.jit(make_decode_step(cfg))
+    prefill = compiled_prefill(cfg, max_seq)
+    step = compiled_decode(cfg)
     logits, caches = prefill(params, batch)
     tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
     out = [tok]

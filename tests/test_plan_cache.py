@@ -1,0 +1,173 @@
+"""Plan/optimizer cache contracts: catalog versioning + LRU semantics.
+
+Pins the two cache bugs fixed alongside the serving tier:
+
+* ``Session.physical_plan`` / ``optimize_result`` keys carry the catalog
+  version (``_env_version``), so rebinding a leaf — sparse -> dense, new
+  values — replans instead of serving a plan staged against stale
+  sparsity masks (the stale-plan regression).
+* The caches are LRU with hit promotion and per-tenant budgets
+  (``VersionedLRU``), not the old FIFO dicts that evicted hot recurring
+  queries as readily as one-offs.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import Session
+from repro.core.api import _PLAN_CACHE_LIMIT
+from repro.core.plancache import VersionedLRU
+
+
+def _sparse(rng, n, density=0.2):
+    v = rng.normal(size=(n, n)).astype(np.float32)
+    return np.where(rng.uniform(size=(n, n)) < density, v, 0)
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: stale-plan regression — rebind must replan
+
+
+def test_rebind_leaf_replans_physical_plan():
+    rng = np.random.default_rng(0)
+    s = Session(block_size=4)
+    xs = _sparse(rng, 12)
+    X = s.load(xs, "X")
+    q = X.t().multiply(X)
+
+    p1 = s.physical_plan(q.plan)
+    r1 = np.asarray(q.collect().value)
+    np.testing.assert_allclose(r1, xs.T @ xs, rtol=1e-4, atol=1e-4)
+
+    # same Expr handle twice -> cache hit, same plan object
+    assert s.physical_plan(q.plan) is p1
+
+    # rebind the leaf sparse -> dense: sparsity annotations that staged
+    # the old plan are now wrong; the cache must miss and replan
+    xd = rng.normal(size=(12, 12)).astype(np.float32)
+    s.load(xd, "X")
+    p2 = s.physical_plan(q.plan)
+    assert p2 is not p1, "stale plan served after catalog rebind"
+
+    r2 = np.asarray(q.collect().value)
+    np.testing.assert_allclose(r2, xd.T @ xd, rtol=1e-4, atol=1e-4)
+
+
+def test_rebind_leaf_invalidates_optimize_result():
+    rng = np.random.default_rng(1)
+    s = Session(block_size=4)
+    X = s.load(_sparse(rng, 8, density=0.1), "X")
+    q = X.t().multiply(X)
+
+    o1 = s.optimize_result(q.plan)
+    assert s.optimize_result(q.plan) is o1
+    s.load(rng.normal(size=(8, 8)).astype(np.float32), "X")
+    assert s.optimize_result(q.plan) is not o1
+
+
+def test_unbound_rebind_still_correct_through_execute():
+    # end-to-end: two executes of one Expr across a rebind give the
+    # results for the data bound at each point, not a cached stale pair
+    rng = np.random.default_rng(2)
+    s = Session(block_size=4)
+    a = _sparse(rng, 8)
+    A = s.load(a, "A")
+    q = A.add(A)
+    np.testing.assert_allclose(np.asarray(q.collect().value), a + a,
+                               rtol=1e-5, atol=1e-5)
+    b = rng.normal(size=(8, 8)).astype(np.float32)
+    s.load(b, "A")
+    np.testing.assert_allclose(np.asarray(q.collect().value), b + b,
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: LRU semantics of the shared cache class
+
+
+def test_lru_hit_promotes_against_eviction():
+    c = VersionedLRU(capacity=3)
+    c.put("a", 1)
+    c.put("b", 2)
+    c.put("c", 3)
+    assert c.get("a") == 1          # promote a to MRU
+    c.put("d", 4)                   # must evict b (LRU), not a (FIFO-oldest)
+    assert "a" in c and "b" not in c
+    assert c.keys() == ["c", "a", "d"]
+    assert c.stats.evictions == 1
+
+
+def test_lru_capacity_bound_holds():
+    c = VersionedLRU(capacity=4)
+    for i in range(32):
+        c.put(i, i)
+    assert len(c) == 4
+    assert c.keys() == [28, 29, 30, 31]
+
+
+def test_get_or_create_caches_factory():
+    c = VersionedLRU(capacity=4)
+    calls = []
+    v1 = c.get_or_create("k", lambda: calls.append(1) or "v")
+    v2 = c.get_or_create("k", lambda: calls.append(1) or "w")
+    assert v1 == v2 == "v" and len(calls) == 1
+    assert c.stats.hits == 1 and c.stats.misses == 1
+
+
+def test_tenant_budget_evicts_own_lru_first():
+    c = VersionedLRU(capacity=16, tenant_budget=2)
+    c.put("t1a", 1, tenant="t1")
+    c.put("t2a", 2, tenant="t2")
+    c.put("t1b", 3, tenant="t1")
+    c.put("t1c", 4, tenant="t1")    # t1 over budget -> evict t1a
+    assert "t1a" not in c
+    assert "t2a" in c and "t1b" in c and "t1c" in c
+    assert c.tenant_entries("t1") == 2
+    assert c.stats.tenant_evictions == 1
+
+
+def test_session_caches_are_shared_lru_instances():
+    s = Session()
+    assert isinstance(s._plan_cache, VersionedLRU)
+    assert isinstance(s._opt_cache, VersionedLRU)
+    assert s._plan_cache.capacity == _PLAN_CACHE_LIMIT
+    assert s._opt_cache.capacity == _PLAN_CACHE_LIMIT
+
+
+def test_session_plan_cache_bounded_with_promotion():
+    # drive the actual Session cache (swapped to a small capacity) past
+    # its bound; the recurring query must stay resident
+    rng = np.random.default_rng(3)
+    s = Session(block_size=4)
+    s._plan_cache = VersionedLRU(capacity=3)
+    hot = s.load(_sparse(rng, 4), "hot")
+    hot_q = hot.add(1.0)
+    p_hot = s.physical_plan(hot_q.plan)
+    for i in range(6):
+        m = s.load(_sparse(rng, 4), f"cold{i}")
+        s.physical_plan(m.add(float(i)).plan)
+        assert s.physical_plan(hot_q.plan) is not None  # keep hot warm
+    assert len(s._plan_cache) <= 3
+
+
+def test_lru_thread_safety_smoke():
+    c = VersionedLRU(capacity=8)
+    errs = []
+
+    def worker(t):
+        try:
+            for i in range(200):
+                c.put((t, i % 10), i, tenant=f"t{t}")
+                c.get((t, (i + 1) % 10))
+                c.get_or_create((t, "k"), lambda: t, tenant=f"t{t}")
+        except Exception as e:          # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    assert len(c) <= 8

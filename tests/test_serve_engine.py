@@ -1,0 +1,228 @@
+"""Serving-tier tests: parity, CSE accounting, admission, versioning.
+
+The engine contract: any stream of submissions, from any number of client
+threads, returns exactly the results serial ``Session.execute`` would —
+cross-query CSE, batching and version retirement are invisible except in
+the stats counters.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import Session
+from repro.serve import workload as wl
+from repro.serve.engine import AdmissionError, ServeEngine
+
+
+def _mk(n=16, seed=0):
+    rng = np.random.default_rng(seed)
+    s = Session(block_size=4)
+    mats = wl.synthetic_catalog(s, rng, n=n)
+    return s, wl.query_templates(mats), rng
+
+
+def _val(x):
+    return np.asarray(getattr(x, "value", x))
+
+
+# ---------------------------------------------------------------------------
+# parity: engine results == serial collect, cse on and off
+
+
+@pytest.mark.parametrize("cse", [True, False])
+def test_engine_matches_serial_execute(cse):
+    s, templates, _rng = _mk()
+    serial = {name: _val(s.execute(expr)) for name, expr in templates}
+    with ServeEngine(s, cse=cse, n_threads=2) as eng:
+        tickets = [(name, eng.submit(expr)) for name, expr in templates
+                   for _ in range(3)]
+        for name, t in tickets:
+            got = _val(t.result(timeout=120.0))
+            np.testing.assert_allclose(got, serial[name],
+                                       rtol=1e-4, atol=1e-4)
+        snap = eng.snapshot()
+    assert snap["completed"] == len(tickets)
+    assert snap["errors"] == 0
+
+
+# ---------------------------------------------------------------------------
+# CSE accounting
+
+
+def test_repeat_query_is_root_hit():
+    s, templates, _rng = _mk()
+    expr = dict(templates)["gram"]
+    with ServeEngine(s, cse=True, n_threads=1) as eng:
+        r1 = _val(eng.run(expr, timeout=120.0))
+        r2 = _val(eng.run(expr, timeout=120.0))
+        snap = eng.snapshot()
+    np.testing.assert_allclose(r1, r2)
+    assert snap["root_hits"] >= 1
+    assert snap["result_cache"]["hits"] >= 1
+
+
+def test_overlapping_templates_share_arena_nodes():
+    # gram / gram_trace / gram_rowsum all embed XᵀX: lowering them into
+    # the shared arena must reuse nodes across *distinct* queries
+    s, templates, _rng = _mk()
+    by = dict(templates)
+    with ServeEngine(s, cse=True, n_threads=1) as eng:
+        for name in ("gram", "gram_trace", "gram_rowsum", "gram_shift"):
+            eng.run(by[name], timeout=120.0)
+        snap = eng.snapshot()
+    assert snap["inter_query_cse_nodes"] > 0
+    assert snap["arena_nodes"] > 0
+    assert snap["leaf_scans"] < snap["leaf_refs"]  # batched leaf dedupe
+
+
+def test_no_cse_has_no_sharing():
+    s, templates, _rng = _mk()
+    expr = dict(templates)["gram"]
+    with ServeEngine(s, cse=False, n_threads=1) as eng:
+        eng.run(expr, timeout=120.0)
+        eng.run(expr, timeout=120.0)
+        snap = eng.snapshot()
+    assert snap["root_hits"] == 0
+    assert snap["inter_query_cse_nodes"] == 0
+
+
+# ---------------------------------------------------------------------------
+# admission control
+
+
+def test_queue_full_rejects():
+    s, templates, _rng = _mk(n=8)
+    expr = dict(templates)["gram"]
+    with ServeEngine(s, cse=True, n_threads=1, max_queue=0) as eng:
+        with pytest.raises(AdmissionError):
+            eng.submit(expr)
+        assert eng.snapshot()["rejected_queue"] == 1
+
+
+def test_tenant_inflight_budget_rejects():
+    s, templates, _rng = _mk(n=8)
+    expr = dict(templates)["gram"]
+    gate = threading.Event()
+    eng = ServeEngine(s, cse=True, n_threads=1, tenant_max_inflight=2)
+    orig = eng._execute
+
+    def gated(state, ticket, lw):
+        gate.wait(30.0)
+        orig(state, ticket, lw)
+
+    eng._execute = gated
+    try:
+        t1 = eng.submit(expr, tenant="a")
+        t2 = eng.submit(expr, tenant="a")
+        with pytest.raises(AdmissionError):
+            eng.submit(expr, tenant="a")      # over budget while in flight
+        t3 = eng.submit(expr, tenant="b")     # other tenants unaffected
+        gate.set()
+        for t in (t1, t2, t3):
+            t.result(timeout=120.0)
+        assert eng.snapshot()["rejected_tenant"] == 1
+    finally:
+        gate.set()
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+# catalog versioning: rebind retires shared results
+
+
+def test_rebind_gives_fresh_results_not_stale_cache():
+    rng = np.random.default_rng(7)
+    s = Session(block_size=4)
+    a = rng.normal(size=(8, 8)).astype(np.float32)
+    A = s.load(a, "A")
+    q = A.t().multiply(A)
+    with ServeEngine(s, cse=True, n_threads=1) as eng:
+        r1 = _val(eng.run(q, timeout=120.0))
+        np.testing.assert_allclose(r1, a.T @ a, rtol=1e-4, atol=1e-4)
+        b = rng.normal(size=(8, 8)).astype(np.float32)
+        s.load(b, "A")                        # bump catalog version
+        r2 = _val(eng.run(q, timeout=120.0))
+        np.testing.assert_allclose(r2, b.T @ b, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# concurrency smoke: many client threads, overlapping plans
+
+
+@pytest.mark.parametrize("cse", [True, False])
+def test_concurrent_clients_match_serial(cse):
+    s, templates, rng = _mk()
+    serial = {name: _val(s.execute(expr)) for name, expr in templates}
+    stream = wl.client_stream(rng, templates, n_clients=60, n_tenants=4)
+    errs = []
+
+    with ServeEngine(s, cse=cse, n_threads=2) as eng:
+        def client(chunk):
+            try:
+                for tenant, name, expr in chunk:
+                    got = _val(eng.run(expr, tenant=tenant, timeout=120.0))
+                    np.testing.assert_allclose(got, serial[name],
+                                               rtol=1e-4, atol=1e-4)
+            except Exception as e:            # pragma: no cover
+                errs.append(e)
+
+        threads = [threading.Thread(target=client, args=(stream[i::4],))
+                   for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        snap = eng.snapshot()
+    assert not errs
+    assert snap["completed"] == len(stream)
+    assert snap["errors"] == 0
+    if cse:
+        assert snap["root_hits"] > 0          # hot zipf templates repeat
+
+
+def test_concurrent_rebind_no_version_races():
+    # clients submit while another thread rebinds the catalog: every query
+    # must complete (against the version it was admitted under) with no
+    # errors, and post-drain queries see the final binding
+    rng = np.random.default_rng(11)
+    s = Session(block_size=4)
+    a = rng.normal(size=(8, 8)).astype(np.float32)
+    A = s.load(a, "A")
+    q = A.add(A)
+    errs = []
+    with ServeEngine(s, cse=True, n_threads=2) as eng:
+        def client():
+            try:
+                for _ in range(30):
+                    _val(eng.run(q, timeout=120.0))
+            except Exception as e:            # pragma: no cover
+                errs.append(e)
+
+        def rebinder():
+            try:
+                for i in range(10):
+                    s.load(a * (i + 2), "A")
+            except Exception as e:            # pragma: no cover
+                errs.append(e)
+
+        ts = [threading.Thread(target=client) for _ in range(3)]
+        ts.append(threading.Thread(target=rebinder))
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        final = _val(eng.run(q, timeout=120.0))
+        snap = eng.snapshot()
+    assert not errs
+    assert snap["errors"] == 0
+    np.testing.assert_allclose(final, (a * 11) + (a * 11),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_closed_engine_rejects_submit():
+    s, templates, _rng = _mk(n=8)
+    eng = ServeEngine(s, n_threads=1)
+    eng.close()
+    with pytest.raises(RuntimeError):
+        eng.submit(dict(templates)["gram"])

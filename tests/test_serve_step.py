@@ -1,0 +1,76 @@
+"""Serving-step cache tests: compiled steps are hoisted, not re-wrapped.
+
+Pins the bugfix where ``generate`` wrapped ``make_decode_step`` in a fresh
+``jax.jit`` per call, so every generation re-traced (and re-compiled) the
+decode step. The hoisted cache must trace each (cfg, shape) step exactly
+once per process, stay LRU-bounded, and return results identical to the
+pre-fix path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import api as mapi
+from repro.models.module import init_params
+from repro.serve import step as stepmod
+from repro.serve.step import (compiled_decode, compiled_prefill, generate,
+                              trace_count)
+
+
+@pytest.fixture()
+def tiny():
+    cfg = reduced(get_config("qwen3-1.7b"))
+    params = init_params(jax.random.key(0), mapi.spec(cfg))
+    rng = np.random.default_rng(0)
+    prompt = jnp.asarray(rng.integers(1, cfg.vocab_size, (2, 8)), jnp.int32)
+    return cfg, params, prompt
+
+
+def test_generate_compiles_each_step_once(tiny):
+    cfg, params, prompt = tiny
+    max_seq = 16
+    out1 = generate(params, cfg, prompt, n_new=4, max_seq=max_seq)
+    n_prefill = trace_count("prefill", cfg, max_seq)
+    n_decode = trace_count("decode", cfg, True, False)
+    assert n_prefill == 1
+    assert n_decode == 1           # 3 decode calls, one trace
+
+    out2 = generate(params, cfg, prompt, n_new=4, max_seq=max_seq)
+    assert trace_count("prefill", cfg, max_seq) == n_prefill
+    assert trace_count("decode", cfg, True, False) == n_decode
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+def test_compiled_steps_are_cached_objects(tiny):
+    cfg, params, prompt = tiny
+    assert compiled_prefill(cfg, 16) is compiled_prefill(cfg, 16)
+    assert compiled_decode(cfg) is compiled_decode(cfg)
+    # distinct shapes / donation settings are distinct entries
+    assert compiled_prefill(cfg, 16) is not compiled_prefill(cfg, 24)
+    assert compiled_decode(cfg) is not compiled_decode(cfg, donate=True)
+
+
+def test_step_cache_is_bounded(tiny):
+    cfg, _params, _prompt = tiny
+    cap = stepmod._STEP_CACHE.capacity
+    for m in range(16, 16 + cap + 4):
+        compiled_prefill(cfg, m)
+    assert len(stepmod._STEP_CACHE) <= cap
+
+
+def test_donating_decode_matches_nondonating(tiny):
+    cfg, params, prompt = tiny
+    max_seq = 16
+    prefill = compiled_prefill(cfg, max_seq)
+    logits, caches = prefill(params, {"tokens": prompt})
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+
+    _, t_plain, _ = compiled_decode(cfg)(
+        params, jax.tree.map(jnp.copy, caches), tok,
+        jnp.int32(prompt.shape[1]))
+    _, t_donate, _ = compiled_decode(cfg, donate=True)(
+        params, caches, tok, jnp.int32(prompt.shape[1]))
+    np.testing.assert_array_equal(np.asarray(t_plain),
+                                  np.asarray(t_donate))
