@@ -1,0 +1,71 @@
+"""CI gate over a cost-ledger JSONL file (bench-smoke tier).
+
+Asserts the ledger a traced serving run produced actually holds up:
+every row parses against the v1 schema with predictions and
+measurements populated, and the predicted-vs-measured communication
+bytes agree within 2x over the rows that measured both (single-device
+runs predict zero comm and emit zero collectives — exact agreement by
+the ledger's both-zero rule, so the gate is meaningful at any scale).
+
+    python benchmarks/check_ledger.py results/ledger.jsonl
+"""
+from __future__ import annotations
+
+import sys
+
+
+def check(path: str) -> int:
+    from repro.obs.ledger import CostLedger
+
+    rows = CostLedger.load_rows(path)
+    if not rows:
+        print(f"[check_ledger] FAIL: {path} has no rows")
+        return 1
+    for i, r in enumerate(rows):
+        for field in ("schema", "query", "exec_path", "predicted",
+                      "measured", "plan_nodes", "mode", "n_workers"):
+            if field not in r:
+                print(f"[check_ledger] FAIL: row {i} missing {field!r}")
+                return 1
+        if r["schema"] != 1:
+            print(f"[check_ledger] FAIL: row {i} schema {r['schema']}")
+            return 1
+        if r["predicted"]["flops"] is None or r["predicted"]["flops"] < 0:
+            print(f"[check_ledger] FAIL: row {i} has no predicted flops")
+            return 1
+        if r["measured"]["wall_s"] < 0:
+            print(f"[check_ledger] FAIL: row {i} negative wall time")
+            return 1
+
+    # recompute the comm ratio the way CostLedger.summary does
+    pred = meas = 0.0
+    comm_rows = 0
+    for r in rows:
+        mc = r["measured"]["comm_bytes"]
+        if mc is not None:
+            pred += r["predicted"]["comm_bytes"]
+            meas += mc
+            comm_rows += 1
+    ratio = None
+    if comm_rows:
+        ratio = (1.0 if pred == meas == 0.0
+                 else pred / max(meas, 1e-12))
+        if not (0.5 <= ratio <= 2.0):
+            print(f"[check_ledger] FAIL: predicted/measured comm ratio "
+                  f"{ratio:.2f} outside [0.5, 2.0] "
+                  f"(pred={pred:.0f}B meas={meas:.0f}B)")
+            return 1
+    paths = {}
+    for r in rows:
+        paths[r["exec_path"]] = paths.get(r["exec_path"], 0) + 1
+    print(f"[check_ledger] OK: {len(rows)} rows, paths={paths}, "
+          f"comm_rows={comm_rows}, comm_ratio="
+          f"{'n/a' if ratio is None else f'{ratio:.2f}'}")
+    return 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 2:
+        print("usage: check_ledger.py <ledger.jsonl>")
+        raise SystemExit(2)
+    raise SystemExit(check(sys.argv[1]))

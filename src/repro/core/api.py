@@ -49,7 +49,8 @@ class Session:
 
     def __init__(self, block_size: int = 256, mode: str = "sparse",
                  use_bloom: bool = True, engine: str = "dag",
-                 n_workers: Optional[int] = None, search: str = "memo"):
+                 n_workers: Optional[int] = None, search: str = "memo",
+                 ledger=None):
         if engine not in ("dag", "tree"):
             raise ValueError(f"unknown engine {engine!r}")
         if search not in ("memo", "greedy"):
@@ -61,6 +62,10 @@ class Session:
         self.engine = engine
         self.search = search
         self.n_workers = n_workers
+        # optional ``obs.ledger.CostLedger``: when set, every plan this
+        # session executes through the DAG engine appends one
+        # predicted-vs-actual row (the serving tier installs its own)
+        self.ledger = ledger
         self._auto = 0
         self._mesh = None
         self._env_version = 0
@@ -114,17 +119,34 @@ class Session:
 
     def execute(self, plan: Expr, optimize: bool = True,
                 engine: Optional[str] = None):
+        from repro.obs.trace import span
+        opt = None
         if optimize:
-            plan = self._optimized(plan)
+            opt = self.optimize_result(plan)
+            plan = opt.plan
         engine = engine or self.engine
         if engine not in ("dag", "tree"):
             raise ValueError(f"unknown engine {engine!r}")
         if engine == "tree":
-            return exmod.execute(plan, self.env, mode=self.mode,
-                                 block_size=self.block_size,
-                                 use_bloom=self.use_bloom)
-        return planmod.execute_plan(self.physical_plan(plan), self.env,
-                                    mesh=self.mesh)
+            with span("execute", path="tree"):
+                return exmod.execute(plan, self.env, mode=self.mode,
+                                     block_size=self.block_size,
+                                     use_bloom=self.use_bloom)
+        pplan = self.physical_plan(plan)
+        ex = planmod.PlanExecutor(self.env, mesh=self.mesh)
+        import time
+        t0 = time.perf_counter()
+        out = ex.run(pplan)
+        if self.ledger is not None:
+            from repro.core.expr import signature
+            from repro.obs.ledger import exec_path_of
+            self.ledger.record(
+                query=signature(plan), plan=pplan,
+                exec_path=exec_path_of(ex.stats),
+                wall_s=time.perf_counter() - t0,
+                compile_s=ex.timings["compile_s"],
+                overflow=ex.stats["sparse_overflows"] > 0, opt=opt)
+        return out
 
     def optimize_result(self, plan: Expr,
                         search: Optional[str] = None) -> optmod.OptimizeResult:
@@ -263,7 +285,7 @@ class Matrix:
         return self.session.physical_plan(plan)
 
     def explain(self, physical: bool = False,
-                measure_comm: bool = False) -> str:
+                measure_comm: bool = False, trace: bool = False) -> str:
         """Logical EXPLAIN (rewrites + costs) or, with ``physical=True``,
         the physical DAG with per-node cost, strategy, backend and (on
         multi-worker sessions) propagated partition schemes + predicted
@@ -272,7 +294,14 @@ class Matrix:
         flops/comm/nnz cost breakdowns. ``measure_comm=True``
         additionally compiles the staged SPMD program and prints its
         HLO-measured collective bytes next to the prediction (dense
-        jit-safe plans on a mesh only)."""
+        jit-safe plans on a mesh only). ``trace=True`` additionally runs
+        the query once under a forced-sample trace — bypassing the
+        session's memoized optimize/plan caches so every lifecycle phase
+        fires — and appends the rendered span tree with per-phase
+        timings (``repro.obs.trace``)."""
+        trace_txt = ""
+        if trace:
+            trace_txt = "\n" + self._traced_run().render()
         if physical:
             result = self.optimized_plan()
             plan = self.session.physical_plan(result.plan)
@@ -291,8 +320,25 @@ class Matrix:
                 measured = staged_collective_bytes(
                     plan, self.session.env, self.session.mesh)
             return planmod.render(plan, measured_bytes=measured,
-                                  opt=result)
-        return self.optimized_plan().describe(self.plan)
+                                  opt=result) + trace_txt
+        return self.optimized_plan().describe(self.plan) + trace_txt
+
+    def _traced_run(self):
+        """Execute once under a forced-sample trace, hitting every
+        lifecycle phase (the session memo caches are bypassed so the
+        optimize / lower spans are not hidden by a warm cache)."""
+        from repro.core.expr import signature
+        from repro.obs.trace import TRACER
+        s = self.session
+        tr = TRACER.start("query", sample=True, query=signature(self.plan))
+        with TRACER.activate(tr):
+            opt = optmod.optimize(self.plan, search=s.search, session=s)
+            pplan = planmod.build_plan(
+                opt.plan, mode=s.mode, block_size=s.block_size,
+                use_bloom=s.use_bloom, n_workers=s.n_workers)
+            planmod.PlanExecutor(s.env, mesh=s.mesh).run(pplan)
+        tr.finish()
+        return tr
 
     def collect(self, optimize: bool = True, engine: Optional[str] = None):
         return self.session.execute(self.plan, optimize=optimize,

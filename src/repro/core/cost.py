@@ -142,6 +142,7 @@ def physical_cost(e: Expr, session=None, *, mode: str = None,
     ``plan.masks.Leaves`` so one optimize() call fetches each catalog
     array and block mask at most once across all candidate lowerings.
     """
+    from repro.obs.trace import span
     from repro.plan import builder as buildermod
     from repro.plan import ops as P
     if session is not None:
@@ -149,18 +150,19 @@ def physical_cost(e: Expr, session=None, *, mode: str = None,
         block_size = block_size or session.block_size
         use_bloom = session.use_bloom if use_bloom is None else use_bloom
         n_workers = n_workers or session.n_workers
-    plan = buildermod.build_plan(
-        e, mode=mode or "sparse", block_size=block_size or 256,
-        use_bloom=True if use_bloom is None else use_bloom,
-        n_workers=n_workers, cost_only=True)
-    bounds = {}
-    if session is not None:
-        from repro.plan import masks as masksmod
-        try:
-            infos = masksmod.annotate(plan, session.env, leaves=leaves)
-            bounds = {i: info.nnz for i, info in infos.items()}
-        except KeyError:
-            pass  # unbound leaves: fall back to the logical estimators
+    with span("physical_cost"):
+        plan = buildermod.build_plan(
+            e, mode=mode or "sparse", block_size=block_size or 256,
+            use_bloom=True if use_bloom is None else use_bloom,
+            n_workers=n_workers, cost_only=True)
+        bounds = {}
+        if session is not None:
+            from repro.plan import masks as masksmod
+            try:
+                infos = masksmod.annotate(plan, session.env, leaves=leaves)
+                bounds = {i: info.nnz for i, info in infos.items()}
+            except KeyError:
+                pass  # unbound leaves: fall back to the logical estimators
     nnz = 0.0
     for node in plan.nodes:
         if node.kind == P.LEAF:

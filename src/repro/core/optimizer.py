@@ -377,11 +377,17 @@ def optimize(e: Expr, enable_chain_reorder: bool = True,
     against the session's mode, block size, mesh and bound leaf data;
     ``cost_cache``/``leaves`` optionally share that costing state across
     calls over one catalog version (see ``optimize_memo``)."""
+    from repro.obs.trace import TRACER
     if search == "greedy":
-        return optimize_greedy(e, enable_chain_reorder, enable_pushdown)
+        with TRACER.span("optimize", search="greedy"):
+            return optimize_greedy(e, enable_chain_reorder, enable_pushdown)
     if search != "memo":
         raise ValueError(f"unknown search {search!r}")
-    return optimize_memo(e, session=session, budget=budget,
-                         enable_chain_reorder=enable_chain_reorder,
-                         enable_pushdown=enable_pushdown,
-                         cost_cache=cost_cache, leaves=leaves)
+    with TRACER.span("optimize", search="memo"):
+        out = optimize_memo(e, session=session, budget=budget,
+                            enable_chain_reorder=enable_chain_reorder,
+                            enable_pushdown=enable_pushdown,
+                            cost_cache=cost_cache, leaves=leaves)
+        TRACER.annotate(costings=out.iterations,
+                        fired=",".join(out.fired) or "(none)")
+        return out

@@ -52,7 +52,8 @@ class VersionedLRU:
     LRU first). Both bounds hold after every ``put``.
     """
 
-    def __init__(self, capacity: int, tenant_budget: Optional[int] = None):
+    def __init__(self, capacity: int, tenant_budget: Optional[int] = None,
+                 name: Optional[str] = None, registry=None):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         if tenant_budget is not None and tenant_budget < 1:
@@ -63,6 +64,30 @@ class VersionedLRU:
         self._tenant_counts: Dict[str, int] = {}
         self._lock = threading.Lock()
         self.stats = CacheStats()
+        # optional ``obs.metrics.MetricsRegistry``: every stat bump also
+        # increments ``cache_<field>{cache=<name>}`` so all caches in a
+        # process share one metrics surface; ``stats`` stays the
+        # attribute-style compatibility view
+        self._counters = None
+        if registry is not None:
+            labels = {"cache": name} if name else {}
+            self._counters = {
+                f: registry.counter(f"cache_{f}", **labels)
+                for f in ("hits", "misses", "evictions",
+                          "tenant_evictions")}
+
+    def _count(self, field: str) -> None:
+        """Single increment site per event (lock held by the caller)."""
+        setattr(self.stats, field, getattr(self.stats, field) + 1)
+        if self._counters is not None:
+            self._counters[field].inc()
+
+    def stats_snapshot(self) -> Dict[str, int]:
+        """Stats as a dict, read atomically under the cache lock — the
+        torn-read-safe form ``ServeEngine.snapshot`` embeds (a bare
+        ``dataclasses.asdict(self.stats)`` races concurrent bumps)."""
+        with self._lock:
+            return dataclasses.asdict(self.stats)
 
     def __len__(self) -> int:
         with self._lock:
@@ -81,10 +106,10 @@ class VersionedLRU:
         with self._lock:
             hit = self._data.get(key)
             if hit is None:
-                self.stats.misses += 1
+                self._count("misses")
                 return default
             self._data.move_to_end(key)      # the LRU promotion FIFO lacked
-            self.stats.hits += 1
+            self._count("hits")
             return hit[0]
 
     def put(self, key: Hashable, value: Any,
@@ -131,13 +156,13 @@ class VersionedLRU:
     def _evict_global_lru(self) -> None:
         _, (_, t) = self._data.popitem(last=False)
         self._tenant_counts[t] -= 1
-        self.stats.evictions += 1
+        self._count("evictions")
 
     def _evict_tenant_lru(self, tenant: str) -> None:
         for k, (_, t) in self._data.items():   # LRU→MRU order
             if t == tenant:
                 del self._data[k]
                 self._tenant_counts[t] -= 1
-                self.stats.evictions += 1
-                self.stats.tenant_evictions += 1
+                self._count("evictions")
+                self._count("tenant_evictions")
                 return

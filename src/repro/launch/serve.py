@@ -31,7 +31,10 @@ from repro.serve.step import compiled_decode, compiled_prefill
 
 
 def serve_relational(args) -> int:
+    import json
+
     from repro.core import Session
+    from repro.obs.ledger import CostLedger
     from repro.serve import workload as wl
 
     rng = np.random.default_rng(args.seed)
@@ -42,16 +45,36 @@ def serve_relational(args) -> int:
                               n_tenants=args.tenants)
     print(f"[serve] catalog={list(mats)} templates={len(templates)} "
           f"clients={args.clients} tenants={args.tenants}")
+    ledger = None
+    if args.ledger_out or args.metrics_out:
+        ledger = CostLedger(args.ledger_out or None)
+    snapshots = {}
     for cse in (True, False):
         r = wl.run_workload(session, stream, cse=cse,
                             n_threads=args.threads,
-                            tenant_max_inflight=args.tenant_inflight)
+                            tenant_max_inflight=args.tenant_inflight,
+                            trace_sample=args.trace_sample,
+                            ledger=ledger,
+                            measure_comm=args.measure_comm)
         st = r["stats"]
+        snapshots[f"cse_{'on' if cse else 'off'}"] = st
         print(f"[serve] cse={'on ' if cse else 'off'} "
               f"qps={r['qps']:.0f} p50={r['p50_ms']:.2f}ms "
               f"p99={r['p99_ms']:.2f}ms root_hits={st['root_hits']} "
               f"shared_nodes={st['inter_query_cse_nodes']} "
               f"leaf_scans={st['leaf_scans']}/{st['leaf_refs']}")
+    if args.metrics_out:
+        out = {"engine": snapshots}
+        if ledger is not None:
+            out["ledger"] = {"path": args.ledger_out,
+                             "summary": ledger.summary()}
+        with open(args.metrics_out, "w") as f:
+            json.dump(out, f, indent=2, default=str)
+        print(f"[serve] metrics → {args.metrics_out}"
+              + (f", ledger → {args.ledger_out}"
+                 if args.ledger_out else ""))
+    if ledger is not None:
+        ledger.close()
     return 0
 
 
@@ -116,6 +139,18 @@ def main(argv=None) -> int:
     ap.add_argument("--threads", type=int, default=2)
     ap.add_argument("--tenant-inflight", type=int, default=None,
                     help="admission: max queued+running per tenant")
+    ap.add_argument("--trace-sample", type=float, default=None,
+                    help="engine trace sampling rate (0..1; default: "
+                         "REPRO_TRACE_SAMPLE / off)")
+    ap.add_argument("--ledger-out", default=None,
+                    help="append the predicted-vs-actual cost ledger "
+                         "to this JSONL file")
+    ap.add_argument("--metrics-out", default=None,
+                    help="dump engine metric snapshots (+ ledger "
+                         "summary) as JSON at exit")
+    ap.add_argument("--measure-comm", action="store_true",
+                    help="record measured collective bytes in ledger "
+                         "rows (HLO-derived on a mesh, 0 off-mesh)")
     # LM serving
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--smoke", action="store_true")

@@ -1,0 +1,24 @@
+"""Query-engine observability: span tracing, metrics, the cost ledger.
+
+Three pillars (docs/observability.md):
+
+* ``obs.trace`` — a lightweight thread-safe span tracer instrumented
+  through the full query lifecycle (lower → optimize → physical_cost →
+  schemes_dp → mask_propagation → stage_compile → execute), default-off
+  sampling, per-query trace ids carried on serving ``Ticket``s;
+* ``obs.metrics`` — process-wide counters / gauges / histograms with
+  labeled series and lock-free-read snapshots; the engine, the plan
+  caches and the plan executor all report through it;
+* ``obs.ledger`` — the predicted-vs-actual cost ledger: one JSONL row per
+  executed physical plan with predicted flops/comm/nnz next to measured
+  wall time / compile split / collective bytes — the training corpus for
+  the learned cost model (ROADMAP "measured, learned physical cost
+  model").
+"""
+from repro.obs.trace import (  # noqa: F401
+    Span, Trace, Tracer, TRACER, span, annotate, trace_active,
+)
+from repro.obs.metrics import (  # noqa: F401
+    Counter, Gauge, Histogram, MetricsRegistry, REGISTRY,
+)
+from repro.obs.ledger import CostLedger, default_ledger_path  # noqa: F401

@@ -1,0 +1,123 @@
+"""End-to-end observability demo: full span tree + cost ledger.
+
+Runs one traced query through every lifecycle phase —
+
+    lower → optimize (memo) → physical_cost → schemes_dp →
+    mask_propagation → stage_compile → execute
+
+— and a small served workload that populates a JSONL cost ledger. The
+``schemes_dp`` phase only exists on multi-worker plans, so on a
+single-device host the driver re-execs itself in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the same trick
+the distributed tests use; see ``tests/spmd_check.py``).
+
+    PYTHONPATH=src python -m repro.obs.demo --workers 4 \
+        --ledger-out results/demo_ledger.jsonl --json
+
+``--json`` appends one machine-readable line (``DEMO_JSON {...}``) with
+the covered phase names and the ledger summary — CI greps it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+EXPECTED_PHASES = (
+    "lower", "optimize", "physical_cost", "schemes_dp",
+    "mask_propagation", "stage_compile", "execute",
+)
+
+
+def _respawn(argv, workers: int) -> int:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={workers}")
+    env["JAX_PLATFORMS"] = "cpu"
+    return subprocess.call([sys.executable, "-m", "repro.obs.demo",
+                            *argv], env=env)
+
+
+def run_demo(workers: int, ledger_path: str, emit_json: bool) -> int:
+    import numpy as np
+
+    from repro.core.api import Session
+    from repro.obs.ledger import CostLedger
+    from repro.serve.engine import ServeEngine
+
+    rng = np.random.default_rng(0)
+
+    def sparse(n, d=0.3):
+        v = rng.normal(size=(n, n)).astype(np.float32)
+        return np.where(rng.uniform(size=(n, n)) < d, v, 0) \
+            .astype(np.float32)
+
+    # -- 1. one traced query covering every lifecycle phase ------------------
+    s = Session(block_size=8, n_workers=workers)
+    X = s.load(sparse(32), name="X")
+    q = X.t().multiply(X).trace()
+    tr = q._traced_run()
+    print(tr.render())
+    phases = set(tr.phase_names())
+    missing = [p for p in EXPECTED_PHASES if p not in phases]
+    if missing:
+        print(f"[demo] FAIL: phases missing from trace: {missing}")
+        return 1
+    print(f"[demo] span tree covers all {len(EXPECTED_PHASES)} phases")
+
+    # -- 2. a served workload writing the cost ledger ------------------------
+    if ledger_path and os.path.exists(ledger_path):
+        os.remove(ledger_path)
+    ledger = CostLedger(ledger_path or None)
+    Y = s.load(sparse(32), name="Y")
+    queries = [X.t().multiply(X), X.multiply(Y),
+               X.t().multiply(X).trace(), X.multiply(Y).sum("c")]
+    with ServeEngine(s, n_threads=2, trace_sample=1.0,
+                     ledger=ledger) as eng:
+        tickets = [eng.submit(m) for m in queries for _ in range(3)]
+        eng.drain()
+        for t in tickets:
+            t.result(timeout=300.0)
+    summary = ledger.summary()
+    ledger.close()
+    print(f"[demo] ledger: {summary['rows']} rows, paths="
+          f"{ {k: v['rows'] for k, v in summary['paths'].items()} }")
+    if summary["rows"] < len(queries):
+        print("[demo] FAIL: expected >=1 ledger row per executed plan")
+        return 1
+    if emit_json:
+        print("DEMO_JSON " + json.dumps({
+            "workers": workers,
+            "phases": sorted(phases),
+            "ledger": summary,
+            "ledger_path": ledger_path,
+        }))
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--ledger-out", default="results/demo_ledger.jsonl")
+    ap.add_argument("--json", action="store_true")
+    ap.add_argument("--no-respawn", action="store_true",
+                    help="fail instead of re-execing when the host has "
+                         "fewer devices than --workers")
+    args = ap.parse_args(argv)
+
+    import jax
+    if jax.device_count() < args.workers:
+        if args.no_respawn:
+            print(f"[demo] need {args.workers} devices, have "
+                  f"{jax.device_count()}")
+            return 1
+        sub = [a for a in (argv if argv is not None else sys.argv[1:])
+               if a != "--no-respawn"]
+        return _respawn(sub + ["--no-respawn"], args.workers)
+    return run_demo(args.workers, args.ledger_out, args.json)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -206,12 +206,14 @@ def build_plan(e: Expr, *, mode: str = "sparse", block_size: int = 256,
     skipped — strategy selection, hash-consing and the scheme DP (the
     inputs of the cost) still run, and nothing is ever staged.
     """
+    from repro.obs.trace import span
     assert mode in ("sparse", "dense")
     if n_workers is None:
         n_workers = jax.device_count()
     b = _Builder(mode, block_size, use_bloom, kernel_backend, n_workers,
                  cost_only=cost_only)
-    root = b.lower(e)
+    with span("lower", mode=mode, cost_only=cost_only):
+        root = b.lower(e)
     plan = P.PhysicalPlan(
         nodes=tuple(b.nodes), root=root, mode=mode, block_size=block_size,
         n_workers=n_workers, logical_nodes=count_nodes(e),
@@ -272,10 +274,12 @@ def lower_shared(shared: SharedBuildState, e: Expr,
 
     Not thread-safe — the serving engine serializes arena access.
     """
+    from repro.obs.trace import span
     base = len(shared.nodes)
     b = _Builder(shared.mode, shared.block_size, shared.use_bloom,
                  kernel_backend, shared.n_workers, shared=shared)
-    root = b.lower(e)
+    with span("lower", mode=shared.mode, shared=True):
+        root = b.lower(e)
     # reachable shared ids, ascending = children-first (emit ids increase)
     keep: set = set()
     stack = [root]

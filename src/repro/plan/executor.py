@@ -38,11 +38,14 @@ predicted (validated by ``measured_collective_bytes``).
 """
 from __future__ import annotations
 
+import time
 from typing import Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs.trace import TRACER, span
 
 from repro.core import joins as joinsmod
 from repro.core import joins_device as joinsdev
@@ -69,7 +72,7 @@ class PlanExecutor:
     """
 
     def __init__(self, env: Dict[str, BlockMatrix], stage_jit: bool = True,
-                 mesh=None, node_cache=None):
+                 mesh=None, node_cache=None, metrics=None):
         self.env = env
         self.stage_jit = stage_jit
         self.mesh = mesh
@@ -79,6 +82,11 @@ class PlanExecutor:
         # per *node*, so it composes with the eager path only — ``run``
         # skips jit staging when a cache is installed.
         self.node_cache = node_cache
+        # optional ``obs.metrics.MetricsRegistry``: every counter bump
+        # below mirrors into it as ``executor_<name>`` (the serving tier
+        # passes its per-engine registry); ``stats`` remains the per-run
+        # compatibility view the tests and engine read
+        self.metrics = metrics
         self.stats: Dict[str, int] = {
             "node_evals": 0, "node_reuses": 0, "matmuls": 0,
             "masked_matmuls": 0, "joins": 0,
@@ -86,6 +94,17 @@ class PlanExecutor:
             "staged_sparse_spmd": 0, "sparse_fallbacks": 0,
             "sparse_overflows": 0, "blocks_skipped": 0, "blocks_total": 0,
         }
+        # wall-clock split of the most recent ``run``: staged-path build +
+        # first-call (XLA trace+compile) seconds vs steady-state execute
+        # seconds — the ledger's compile-vs-execute attribution
+        self.timings: Dict[str, float] = {"compile_s": 0.0, "execute_s": 0.0}
+
+    def _bump(self, name: str, n: int = 1) -> None:
+        """Single increment site: the per-run dict and (when installed)
+        the registry counter move together."""
+        self.stats[name] += n
+        if self.metrics is not None:
+            self.metrics.counter("executor_" + name).inc(n)
 
     # -- public ---------------------------------------------------------------
     def run(self, plan: P.PhysicalPlan) -> Result:
@@ -101,19 +120,28 @@ class PlanExecutor:
 
     # -- eager path -----------------------------------------------------------
     def _run_eager(self, plan: P.PhysicalPlan) -> Result:
+        traced = TRACER.active()
         results: Dict[int, Result] = {}
-        for node in plan.nodes:
-            if self.node_cache is not None:
-                hit = self.node_cache.get(plan, node)
-                if hit is not None:
-                    results[node.op_id] = hit
-                    self.stats["node_reuses"] += 1
-                    continue
-            args = [results[c] for c in node.children]
-            results[node.op_id] = self._eval(plan, node, args)
-            self.stats["node_evals"] += 1
-            if self.node_cache is not None:
-                self.node_cache.put(plan, node, results[node.op_id])
+        with span("execute", path="eager", nodes=plan.n_nodes):
+            for node in plan.nodes:
+                if self.node_cache is not None:
+                    hit = self.node_cache.get(plan, node)
+                    if hit is not None:
+                        results[node.op_id] = hit
+                        self._bump("node_reuses")
+                        continue
+                args = [results[c] for c in node.children]
+                # per-node wall time: only traced runs synchronize (so
+                # span times mean device work, not dispatch), untraced
+                # runs keep async dispatch semantics untouched
+                with span("node", op=node.label(), kind=node.kind):
+                    out = self._eval(plan, node, args)
+                    if traced:
+                        _sync(out)
+                results[node.op_id] = out
+                self._bump("node_evals")
+                if self.node_cache is not None:
+                    self.node_cache.put(plan, node, results[node.op_id])
         return results[plan.root]
 
     def _eval(self, plan: P.PhysicalPlan, node: P.PhysicalNode,
@@ -138,7 +166,7 @@ class PlanExecutor:
             return self._masked_elemwise(plan, node, args)
         if k == P.MATMUL:
             a, b = as_matrix(args[0]).value, as_matrix(args[1]).value
-            self.stats["matmuls"] += 1
+            self._bump("matmuls")
             v = jnp.dot(a, b, preferred_element_type=a.dtype)
             return BlockMatrix.from_dense(v, bs)
         if k == P.INVERSE:
@@ -166,7 +194,7 @@ class PlanExecutor:
         prod = registry.dispatch(
             "masked_matmul", w.value, h.value, sp.block_mask,
             backend=node.backend, block_size=plan.block_size)
-        self.stats["masked_matmuls"] += 1
+        self._bump("masked_matmuls")
         if e.op is EWOp.MUL:
             v = sp.value * prod
         else:
@@ -179,7 +207,7 @@ class PlanExecutor:
               args: List[Result]) -> Result:
         e: Join = node.expr
         a, b = as_matrix(args[0]), as_matrix(args[1])
-        self.stats["joins"] += 1
+        self._bump("joins")
         if plan.mode == "dense":
             out = joinsmod.join_dense(a.value, b.value, e.pred, e.merge)
             return dense_join_result(out, plan.block_size)
@@ -194,7 +222,11 @@ class PlanExecutor:
         staged = plan._staged_spmd_fn if mesh is not None \
             else plan._staged_fn
         if staged is None:
-            staged = _stage(plan, mesh)
+            with span("stage_compile", mode="dense",
+                      spmd=mesh is not None):
+                t0 = time.perf_counter()
+                staged = _stage(plan, mesh)
+                self.timings["compile_s"] += time.perf_counter() - t0
             if mesh is not None:
                 plan._staged_spmd_fn = staged
             else:
@@ -204,10 +236,35 @@ class PlanExecutor:
             if name not in self.env:
                 raise KeyError(f"unbound matrix {name!r}")
         leaf_vals = tuple(self.env[name].value for name in leaf_names)
-        self.stats["staged_spmd" if mesh is not None else "staged"] += 1
-        self.stats["node_evals"] += plan.n_nodes
-        out = fn(*leaf_vals)
+        self._bump("staged_spmd" if mesh is not None else "staged")
+        self._bump("node_evals", plan.n_nodes)
+        out = self._call_staged(
+            plan, fn, leaf_vals, "spmd" if mesh is not None else "plain")
         return dense_join_result(out, plan.block_size)
+
+    def _call_staged(self, plan: P.PhysicalPlan, fn, leaf_vals, key: str):
+        """Dispatch one staged call, attributing its wall time: the first
+        call of a freshly-built jit fn is dominated by XLA trace+compile
+        (``jax.jit`` compiles lazily) and lands in ``compile_s``; later
+        calls are steady-state and land in ``execute_s``. Traced runs
+        synchronize so span/ledger times mean finished work."""
+        counts = getattr(plan, "_staged_call_counts", None)
+        if counts is None:
+            counts = plan._staged_call_counts = {}
+        first = counts.get((key, id(fn)), 0) == 0
+        traced = TRACER.active()
+        outer = (TRACER.span("stage_compile", phase="xla-compile")
+                 if first else _noop_ctx())
+        with outer:
+            with span("execute", path=f"staged-{key}", cold=first):
+                t0 = time.perf_counter()
+                out = fn(*leaf_vals)
+                if traced:
+                    _sync(out)
+                dt = time.perf_counter() - t0
+        counts[(key, id(fn))] = counts.get((key, id(fn)), 0) + 1
+        self.timings["compile_s" if first else "execute_s"] += dt
+        return out
 
     # -- jit-staged sparse path -----------------------------------------------
     def _run_staged_sparse(self, plan: P.PhysicalPlan, mesh=None):
@@ -216,7 +273,7 @@ class PlanExecutor:
         from repro.plan import masks as masksmod
         masksmod.annotate(plan, self.env)
         if not masksmod.stageable(plan):
-            self.stats["sparse_fallbacks"] += 1
+            self._bump("sparse_fallbacks")
             return _FALLBACK
         slot = "_staged_sparse_spmd_fn" if mesh is not None \
             else "_staged_sparse_fn"
@@ -236,14 +293,20 @@ class PlanExecutor:
         if entry is None:
             while len(cache) >= _STAGED_SPARSE_CACHE_LIMIT:
                 cache.pop(next(iter(cache)))
-            entry = _stage_sparse(plan, mesh)
+            with span("stage_compile", mode="sparse",
+                      spmd=mesh is not None):
+                t0 = time.perf_counter()
+                entry = _stage_sparse(plan, mesh)
+                self.timings["compile_s"] += time.perf_counter() - t0
             cache[key] = entry
         fn, leaf_names, skip_stats = entry
         for name in leaf_names:
             if name not in self.env:
                 raise KeyError(f"unbound matrix {name!r}")
         leaf_vals = tuple(self.env[name].value for name in leaf_names)
-        out = fn(*leaf_vals)
+        out = self._call_staged(
+            plan, fn, leaf_vals,
+            "sparse-spmd" if mesh is not None else "sparse")
         root = plan.node(plan.root)
         if isinstance(out, joinsdev.DeviceCOO) and joinsdev.overflowed(out):
             # leaf values drifted under an unchanged block mask: the
@@ -251,18 +314,18 @@ class PlanExecutor:
             # oracle now (which counts its own evaluations) and force a
             # re-annotation for the next run.
             plan._mask_key = None
-            self.stats["sparse_overflows"] += 1
+            self._bump("sparse_overflows")
             return _FALLBACK
-        self.stats["staged_sparse_spmd" if mesh is not None
-                   else "staged_sparse"] += 1
-        self.stats["node_evals"] += plan.n_nodes
+        self._bump("staged_sparse_spmd" if mesh is not None
+                   else "staged_sparse")
+        self._bump("node_evals", plan.n_nodes)
         # the staged program computes every DAG node exactly once, so the
         # per-kind compute counters (the CSE evidence) stay meaningful
-        self.stats["matmuls"] += plan.count(P.MATMUL)
-        self.stats["masked_matmuls"] += plan.count(P.MASKED_ELEMWISE)
-        self.stats["joins"] += plan.count(P.JOIN)
-        self.stats["blocks_skipped"] += skip_stats[0]
-        self.stats["blocks_total"] += skip_stats[1]
+        self._bump("matmuls", plan.count(P.MATMUL))
+        self._bump("masked_matmuls", plan.count(P.MASKED_ELEMWISE))
+        self._bump("joins", plan.count(P.JOIN))
+        self._bump("blocks_skipped", skip_stats[0])
+        self._bump("blocks_total", skip_stats[1])
         if isinstance(out, joinsdev.DeviceCOO):
             return joinsdev.coo_to_host(out, root.shape)
         mask = root.meta.get("mask")
@@ -272,6 +335,23 @@ class PlanExecutor:
 
 
 _FALLBACK = object()  # sentinel: staged sparse declined; run the eager oracle
+
+
+def _sync(x) -> None:
+    """Wait for device work in ``x`` (traced runs only — see callers).
+    Host-side results (COO etc.) have nothing to wait for."""
+    try:
+        jax.block_until_ready(getattr(x, "value", x))
+    except Exception:
+        pass
+
+
+class _noop_ctx:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *exc):
+        return False
 
 # Bounds the per-plan staged-sparse compile cache: each entry pins a jitted
 # executable; sessions alternating among a few leaf bindings stay compiled,

@@ -341,11 +341,13 @@ def annotate(plan: P.PhysicalPlan, env: Dict[str, BlockMatrix],
     by the optimizer's cost-only dry-lowerings (which pass a shared
     ``leaves`` so candidate plans reuse one set of host views).
     """
+    from repro.obs.trace import span
     leaves = leaves or _Leaves(env, plan.block_size)
     key = fingerprint(plan, env, leaves)
     if plan._mask_key == key and plan._mask_infos is not None:
         return plan._mask_infos
-    infos = propagate(plan, env, leaves)
+    with span("mask_propagation", nodes=plan.n_nodes):
+        infos = propagate(plan, env, leaves)
     for node in plan.nodes:
         info = infos[node.op_id]
         node.meta["mask"] = info.mask

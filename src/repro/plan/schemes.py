@@ -312,9 +312,11 @@ def annotate(plan: P.PhysicalPlan) -> SchemeAssignment:
     immutable node structure and worker count, so the assignment is
     computed once per plan and cached (repeated EXPLAIN / cost-only
     lowerings skip the DP)."""
+    from repro.obs.trace import span
     if plan._scheme_assignment is not None:
         return plan._scheme_assignment
-    assignment = propagate(plan)
+    with span("schemes_dp", nodes=plan.n_nodes, workers=plan.n_workers):
+        assignment = propagate(plan)
     for node in plan.nodes:
         ns = assignment.nodes[node.op_id]
         node.scheme = ns.scheme

@@ -46,8 +46,10 @@ from collections import deque
 from typing import Dict, List, Optional
 
 from repro.core import optimizer as optmod
-from repro.core.expr import Expr
+from repro.core.expr import Expr, signature
 from repro.core.plancache import VersionedLRU
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import TRACER
 from repro.plan import builder as buildermod
 from repro.plan.executor import PlanExecutor
 from repro.plan import ops as P
@@ -69,9 +71,15 @@ class Ticket:
         self.finished_at: Optional[float] = None
         self.reused_nodes = 0        # node results served from the shared LRU
         self.evaluated_nodes = 0
+        self.trace = None            # obs.trace.Trace when sampled at submit
+        self.opt = None              # OptimizeResult (predicted nnz → ledger)
         self._done = threading.Event()
         self._result = None
         self._error: Optional[BaseException] = None
+
+    @property
+    def trace_id(self) -> Optional[str]:
+        return self.trace.trace_id if self.trace is not None else None
 
     # -- worker side ----------------------------------------------------------
     def _finish(self, result=None, error: Optional[BaseException] = None):
@@ -151,12 +159,25 @@ class ServeEngine:
         window).
     """
 
+    # snapshot() compatibility keys, all registry-backed (``serve_<name>``)
+    _COUNTERS = (
+        "submitted", "completed", "errors",
+        "rejected_queue", "rejected_tenant",
+        "root_hits", "node_reuses", "node_evals",
+        "inter_query_cse_nodes",
+        "leaf_scans", "leaf_refs", "batches",
+    )
+
     def __init__(self, session, *, n_threads: int = 2, max_queue: int = 1024,
                  tenant_max_inflight: Optional[int] = None, cse: bool = True,
                  result_entries: int = 1024,
                  tenant_result_budget: Optional[int] = None,
                  plan_entries: int = 128, opt_entries: int = 256,
-                 batch_max: int = 32, keep_versions: int = 2):
+                 batch_max: int = 32, keep_versions: int = 2,
+                 registry: Optional[MetricsRegistry] = None,
+                 trace_sample: Optional[float] = None,
+                 ledger=None, ledger_root_hits: bool = False,
+                 measure_comm: bool = False):
         self.session = session
         self.cse = cse
         self.max_queue = max_queue
@@ -164,21 +185,39 @@ class ServeEngine:
         self.batch_max = batch_max
         self._plan_entries = plan_entries
         self._opt_entries = opt_entries
+        # per-engine registry by default: tests assert exact counter
+        # values per engine; pass ``obs.metrics.REGISTRY`` to aggregate
+        # process-wide instead
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        # engine-level sampling override: None defers to the global
+        # tracer's rate (REPRO_TRACE_SAMPLE); a float forces this
+        # engine's own deterministic 1-in-N choice
+        self.trace_sample = trace_sample
+        self._trace_seq = 0
+        # optional obs.ledger.CostLedger: one predicted-vs-actual row per
+        # executed plan; measure_comm additionally compiles the staged
+        # SPMD program for HLO-measured collective bytes (mesh runs only).
+        # Root hits execute nothing (the row would record a cache lookup,
+        # useless for cost-model re-fitting) so they are skipped unless
+        # ledger_root_hits is set — this keeps the ledger off the
+        # hottest serving path.
+        self.ledger = ledger
+        self.ledger_root_hits = ledger_root_hits
+        self.measure_comm = measure_comm
         self._results = VersionedLRU(result_entries,
-                                     tenant_budget=tenant_result_budget)
+                                     tenant_budget=tenant_result_budget,
+                                     name="results", registry=self.metrics)
+        self._counters = {name: self.metrics.counter("serve_" + name)
+                          for name in self._COUNTERS}
+        self._arena_nodes = self.metrics.gauge("serve_arena_nodes")
+        self._latency = self.metrics.histogram("serve_latency_s")
+        self._queue_wait = self.metrics.histogram("serve_queue_wait_s")
         self._states: "deque[_VersionState]" = deque(maxlen=keep_versions)
         self._queue: "deque[Ticket]" = deque()
         self._inflight: Dict[str, int] = {}
         self._lock = threading.Lock()
         self._work = threading.Condition(self._lock)
         self._stop = False
-        self.stats: Dict[str, int] = {
-            "submitted": 0, "completed": 0, "errors": 0,
-            "rejected_queue": 0, "rejected_tenant": 0,
-            "root_hits": 0, "node_reuses": 0, "node_evals": 0,
-            "inter_query_cse_nodes": 0, "arena_nodes": 0,
-            "leaf_scans": 0, "leaf_refs": 0, "batches": 0,
-        }
         self._threads = [
             threading.Thread(target=self._worker_loop, daemon=True,
                              name=f"serve-worker-{i}")
@@ -213,21 +252,41 @@ class ServeEngine:
             if self._stop:
                 raise RuntimeError("engine is closed")
             if len(self._queue) >= self.max_queue:
-                self.stats["rejected_queue"] += 1
+                self._counters["rejected_queue"].inc()
                 raise AdmissionError(
                     f"queue full ({self.max_queue} tickets)")
             if (self.tenant_max_inflight is not None
                     and self._inflight.get(tenant, 0)
                     >= self.tenant_max_inflight):
-                self.stats["rejected_tenant"] += 1
+                self._counters["rejected_tenant"].inc()
                 raise AdmissionError(
                     f"tenant {tenant!r} over budget "
                     f"({self.tenant_max_inflight} in flight)")
             self._inflight[tenant] = self._inflight.get(tenant, 0) + 1
-            self.stats["submitted"] += 1
+            self._counters["submitted"].inc()
+            sample = self._sample_locked()
             self._queue.append(ticket)
             self._work.notify()
+        # trace starts at submit (client thread) and is *activated* on
+        # whichever worker thread executes the ticket — queue wait is the
+        # gap between the two
+        ticket.trace = TRACER.start("query", sample=sample, tenant=tenant,
+                                    query=signature(expr))
         return ticket
+
+    def _sample_locked(self) -> Optional[bool]:
+        """Engine-level trace sampling decision (``self._lock`` held).
+        None → defer to the global tracer's rate."""
+        r = self.trace_sample
+        if r is None:
+            return None
+        if r <= 0.0:
+            return False
+        if r >= 1.0:
+            return True
+        period = max(1, round(1.0 / r))
+        self._trace_seq += 1
+        return self._trace_seq % period == 0
 
     def run(self, query, tenant: str = "default",
             timeout: Optional[float] = None):
@@ -283,6 +342,20 @@ class ServeEngine:
             return st
 
     # -- worker side ----------------------------------------------------------
+    def _finish_ticket(self, ticket: Ticket, result=None,
+                       error: Optional[BaseException] = None) -> None:
+        """The single completion site: every ticket — success, plan
+        failure or execution failure — ends here exactly once, so
+        ``completed``/``errors`` and the latency histogram can never
+        drift from the ticket stream (previously three call sites
+        incremented independently)."""
+        ticket._finish(result=result, error=error)
+        self._counters["errors" if error is not None
+                       else "completed"].inc()
+        self._latency.observe(ticket.latency)
+        if ticket.trace is not None:
+            ticket.trace.finish()
+
     def _worker_loop(self) -> None:
         while True:
             with self._lock:
@@ -293,20 +366,27 @@ class ServeEngine:
                 batch: List[Ticket] = []
                 while self._queue and len(batch) < self.batch_max:
                     batch.append(self._queue.popleft())
-                self.stats["batches"] += 1
+                self._counters["batches"].inc()
             state = self._current_state()
             lowered = [self._plan_ticket(state, t) for t in batch]
             if self.cse:
+                t0 = time.perf_counter()
                 self._prewarm_leaves(state, [p for p in lowered
                                              if p is not None])
+                t1 = time.perf_counter()
+                # batch-level phase, attributed to every traced ticket
+                for ticket in batch:
+                    if ticket.trace is not None:
+                        with TRACER.activate(ticket.trace):
+                            TRACER.add_event("batch_prewarm", t0, t1,
+                                             batch=len(batch))
             for ticket, lw in zip(batch, lowered):
                 try:
                     if lw is not None:
-                        self._execute(state, ticket, lw)
+                        with TRACER.activate(ticket.trace):
+                            self._execute(state, ticket, lw)
                 except BaseException as e:      # propagate to the client
-                    ticket._finish(error=e)
-                    with self._lock:
-                        self.stats["errors"] += 1
+                    self._finish_ticket(ticket, error=e)
                 finally:
                     with self._lock:
                         self._inflight[ticket.tenant] -= 1
@@ -319,36 +399,42 @@ class ServeEngine:
         s = self.session
         try:
             ticket.started_at = time.perf_counter()
-            opt = state.opt_cache.get_or_create(
-                (ticket.query, s.search),
-                lambda: optmod.optimize(
-                    ticket.query, search=s.search, session=s,
-                    cost_cache=state.cost_cache, leaves=state.leaves),
-                tenant=ticket.tenant)
-            if not self.cse:
-                # standalone lowering: no shared arena, fresh/ per-expr
-                # plan via the session cache (jit-staged execution path)
-                plan = state.plans.get_or_create(
-                    opt.plan, lambda: buildermod.build_plan(
-                        opt.plan, mode=s.mode, block_size=s.block_size,
-                        use_bloom=s.use_bloom, n_workers=s.workers),
+            self._queue_wait.observe(ticket.started_at
+                                     - ticket.submitted_at)
+            with TRACER.activate(ticket.trace):
+                TRACER.add_event("queue_wait", ticket.submitted_at,
+                                 ticket.started_at)
+                TRACER.annotate(admitted_version=state.key[0])
+                opt = state.opt_cache.get_or_create(
+                    (ticket.query, s.search),
+                    lambda: optmod.optimize(
+                        ticket.query, search=s.search, session=s,
+                        cost_cache=state.cost_cache, leaves=state.leaves),
                     tenant=ticket.tenant)
-                return buildermod.SharedLowering(
-                    plan=plan, root_shared_id=-1, reused_nodes=0,
-                    new_nodes=plan.n_nodes)
-            def _lower():
-                with state.lock:
-                    lw = buildermod.lower_shared(state.shared, opt.plan)
-                with self._lock:
-                    self.stats["inter_query_cse_nodes"] += lw.reused_nodes
-                    self.stats["arena_nodes"] = len(state.shared.nodes)
-                return lw
-            return state.plans.get_or_create(opt.plan, _lower,
-                                             tenant=ticket.tenant)
+                ticket.opt = opt
+                if not self.cse:
+                    # standalone lowering: no shared arena, fresh/ per-expr
+                    # plan via the session cache (jit-staged execution path)
+                    plan = state.plans.get_or_create(
+                        opt.plan, lambda: buildermod.build_plan(
+                            opt.plan, mode=s.mode, block_size=s.block_size,
+                            use_bloom=s.use_bloom, n_workers=s.workers),
+                        tenant=ticket.tenant)
+                    return buildermod.SharedLowering(
+                        plan=plan, root_shared_id=-1, reused_nodes=0,
+                        new_nodes=plan.n_nodes)
+                def _lower():
+                    with state.lock:
+                        lw = buildermod.lower_shared(state.shared,
+                                                     opt.plan)
+                    self._counters["inter_query_cse_nodes"].inc(
+                        lw.reused_nodes)
+                    self._arena_nodes.set(len(state.shared.nodes))
+                    return lw
+                return state.plans.get_or_create(opt.plan, _lower,
+                                                 tenant=ticket.tenant)
         except BaseException as e:
-            ticket._finish(error=e)
-            with self._lock:
-                self.stats["errors"] += 1
+            self._finish_ticket(ticket, error=e)
             return None
 
     def _prewarm_leaves(self, state: _VersionState,
@@ -362,15 +448,13 @@ class ServeEngine:
                 if node.kind != P.LEAF:
                     continue
                 key = (state.key, node.meta["shared_id"])
-                with self._lock:
-                    self.stats["leaf_refs"] += 1
+                self._counters["leaf_refs"].inc()
                 if key in seen or self._results.get(key) is not None:
                     continue
                 seen.add(key)
                 val = leaf_value(node.expr, state.env, state.shared.block_size)
                 self._results.put(key, val)
-                with self._lock:
-                    self.stats["leaf_scans"] += 1
+                self._counters["leaf_scans"].inc()
 
     # Minimum fraction of a plan's estimated flops that cached subresults
     # must cover before the engine prefers per-node eager reuse over the
@@ -406,16 +490,20 @@ class ServeEngine:
     def _execute(self, state: _VersionState, ticket: Ticket,
                  lw: buildermod.SharedLowering) -> None:
         import jax
+        t0 = time.perf_counter()
+        exec_path = None
+        ex = None
         if self.cse:
             root_key = (state.key,
                         lw.plan.node(lw.plan.root).meta["shared_id"])
             hit = self._results.get(root_key)
             if hit is not None:
-                with self._lock:
-                    self.stats["root_hits"] += 1
-                    self.stats["completed"] += 1
+                self._counters["root_hits"].inc()
                 ticket.reused_nodes = lw.plan.n_nodes
-                ticket._finish(result=hit)
+                if self.ledger_root_hits:
+                    self._ledger_row(state, ticket, lw.plan, "root_hit",
+                                     time.perf_counter() - t0, 0.0)
+                self._finish_ticket(ticket, result=hit)
                 return
             if (self._cse_coverage(state, lw.plan)
                     >= self.EAGER_REUSE_MIN_COVERAGE):
@@ -423,10 +511,11 @@ class ServeEngine:
                 # eagerly, reusing every shared node result and publishing
                 # the new ones (inter-query subexpression sharing)
                 ex = PlanExecutor(
-                    state.env,
+                    state.env, metrics=self.metrics,
                     node_cache=_NodeCache(self._results, state.key,
                                           ticket.tenant))
                 out = ex.run(lw.plan)
+                exec_path = "eager_reuse"
             else:
                 # cold pipeline: run the fast (jit-staged) path once and
                 # publish its root, which seeds subplan reuse for every
@@ -442,18 +531,48 @@ class ServeEngine:
             pass                               # host-side results (COO etc.)
         ticket.reused_nodes = ex.stats["node_reuses"]
         ticket.evaluated_nodes = ex.stats["node_evals"]
-        with self._lock:
-            self.stats["node_reuses"] += ex.stats["node_reuses"]
-            self.stats["node_evals"] += ex.stats["node_evals"]
-            self.stats["completed"] += 1
-        ticket._finish(result=out)
+        self._counters["node_reuses"].inc(ex.stats["node_reuses"])
+        self._counters["node_evals"].inc(ex.stats["node_evals"])
+        if exec_path is None:
+            from repro.obs.ledger import exec_path_of
+            exec_path = exec_path_of(ex.stats)
+        self._ledger_row(state, ticket, lw.plan, exec_path,
+                         time.perf_counter() - t0,
+                         ex.timings["compile_s"],
+                         overflow=ex.stats["sparse_overflows"] > 0)
+        self._finish_ticket(ticket, result=out)
+
+    def _ledger_row(self, state: _VersionState, ticket: Ticket, plan,
+                    exec_path: str, wall_s: float, compile_s: float,
+                    overflow: bool = False) -> None:
+        if self.ledger is None:
+            return
+        measured_comm = None
+        if self.measure_comm:
+            if self.session.mesh is not None:
+                from repro.obs.ledger import measured_comm_bytes
+                measured_comm = measured_comm_bytes(plan, state.env,
+                                                    self.session.mesh)
+            else:
+                # single device: no interconnect, so the measured
+                # collective traffic is exactly zero — recording it keeps
+                # the predicted/measured comm gate meaningful off-mesh
+                # (predicted must also be 0 for the ratio to stay 1.0)
+                measured_comm = 0
+        self.ledger.record(
+            query=signature(ticket.query), plan=plan,
+            exec_path=exec_path, wall_s=wall_s, compile_s=compile_s,
+            measured_comm=measured_comm, overflow=overflow,
+            opt=ticket.opt, trace_id=ticket.trace_id,
+            tenant=ticket.tenant)
 
     def _run_staged(self, state: _VersionState,
                     lw: buildermod.SharedLowering):
         """Standalone (jit-staged when possible) execution of one plan.
         The staged compile caches live on the shared ``PhysicalPlan``, so
         execution is serialized per plan object across worker threads."""
-        ex = PlanExecutor(state.env, mesh=self.session.mesh)
+        ex = PlanExecutor(state.env, mesh=self.session.mesh,
+                          metrics=self.metrics)
         with self._lock:
             lock = state.plan_locks.setdefault(id(lw.plan),
                                                threading.Lock())
@@ -463,8 +582,14 @@ class ServeEngine:
 
     # -- introspection --------------------------------------------------------
     def snapshot(self) -> Dict[str, object]:
-        """Stats snapshot (engine counters + shared-cache hit rates)."""
-        with self._lock:
-            out = dict(self.stats)
-        out["result_cache"] = dataclasses.asdict(self._results.stats)
+        """Stats snapshot: the legacy flat counter keys (now views over
+        the metrics registry), the shared result-cache stats read
+        atomically under that cache's lock, and serve-tier latency /
+        queue-wait histogram summaries (p50/p90/p99 from buckets)."""
+        out: Dict[str, object] = {
+            name: c.value for name, c in self._counters.items()}
+        out["arena_nodes"] = int(self._arena_nodes.value)
+        out["result_cache"] = self._results.stats_snapshot()
+        out["latency"] = self._latency.snapshot()
+        out["queue_wait"] = self._queue_wait.snapshot()
         return out

@@ -1,0 +1,298 @@
+"""Observability pillar tests: tracer, metrics registry, cost ledger.
+
+Pins the properties docs/observability.md promises: nested-span
+integrity under concurrent worker threads, histogram percentile accuracy
+against numpy quantiles, ledger JSONL round-trips, and — the regression
+that matters for production — that turning tracing on cannot retrace a
+jitted program.
+"""
+from __future__ import annotations
+
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.api import Session
+from repro.core.expr import MergeFn
+from repro.obs.ledger import CostLedger, exec_path_of
+from repro.obs.metrics import Histogram, MetricsRegistry
+from repro.obs.trace import TRACER, Tracer, span
+
+
+def _sparse(rng, n, d=0.4):
+    v = rng.normal(size=(n, n)).astype(np.float32)
+    return np.where(rng.uniform(size=(n, n)) < d, v, 0).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_and_attrs():
+    tr = TRACER.start("query", sample=True, q="test")
+    with TRACER.activate(tr):
+        with span("optimize", search="memo"):
+            with span("physical_cost"):
+                pass
+            with span("physical_cost"):
+                pass
+        with span("execute", path="eager"):
+            pass
+    tr.finish()
+    root = tr.root
+    assert [c.name for c in root.children] == ["optimize", "execute"]
+    assert [c.name for c in root.children[0].children] == \
+        ["physical_cost", "physical_cost"]
+    assert root.children[0].attrs["search"] == "memo"
+    assert all(s.t1 is not None for s in tr.spans())
+    assert tr.phase_names() == ["query", "optimize", "physical_cost",
+                                "execute"]
+
+
+def test_spans_disabled_are_noops():
+    # no active trace on this thread → the shared no-op, no allocation
+    cm1 = TRACER.span("anything", k=1)
+    cm2 = TRACER.span("else")
+    assert cm1 is cm2
+    with cm1:
+        pass
+    TRACER.annotate(ignored=True)          # must not raise
+
+
+def test_span_records_errors():
+    tr = TRACER.start("query", sample=True)
+    with TRACER.activate(tr):
+        with pytest.raises(ValueError):
+            with span("execute"):
+                raise ValueError("boom")
+    tr.finish()
+    assert tr.root.children[0].attrs["error"] == "ValueError"
+
+
+def test_nested_spans_threaded_integrity():
+    """4 threads × many traces each: every trace's span tree is exactly
+    what its own thread built — no cross-thread leakage, no corruption."""
+    n_threads, n_traces, depth = 4, 25, 5
+    out = [[] for _ in range(n_threads)]
+    errors = []
+
+    def worker(i):
+        try:
+            for t in range(n_traces):
+                tr = TRACER.start("query", sample=True, thread=i)
+                with TRACER.activate(tr):
+                    def nest(d):
+                        if d == 0:
+                            return
+                        with span(f"level{d}", thread=i, trace=t):
+                            nest(d - 1)
+                    nest(depth)
+                    with span("tail", thread=i):
+                        pass
+                tr.finish()
+                out[i].append(tr)
+        except BaseException as e:          # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    for i, traces in enumerate(out):
+        assert len(traces) == n_traces
+        for tr in traces:
+            names = [s.name for s in tr.spans()]
+            assert names == ["query"] + \
+                [f"level{d}" for d in range(depth, 0, -1)] + ["tail"]
+            # every span carries this thread's id — nothing leaked in
+            for s in tr.spans()[1:]:
+                assert s.attrs["thread"] == i
+            assert all(s.t1 is not None for s in tr.spans())
+
+
+def test_sampling_deterministic():
+    t = Tracer(sample_rate=0.25)
+    picks = [t.sampled() for _ in range(100)]
+    assert sum(picks) == 25
+    assert Tracer(sample_rate=0.0).sampled() is False
+    assert Tracer(sample_rate=1.0).sampled() is True
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_registry_counters_and_labels():
+    reg = MetricsRegistry()
+    reg.counter("hits", cache="a").inc()
+    reg.counter("hits", cache="a").inc(2)
+    reg.counter("hits", cache="b").inc()
+    assert reg.counter("hits", cache="a").value == 3
+    assert reg.counter("hits", cache="b").value == 1
+    reg.gauge("depth").set(7)
+    snap = reg.snapshot()
+    assert snap["hits{cache=a}"] == 3
+    assert snap["depth"] == 7
+
+
+def test_histogram_percentiles_vs_numpy():
+    rng = np.random.default_rng(7)
+    samples = rng.lognormal(mean=-6.0, sigma=1.2, size=4000)
+    h = Histogram()
+    for v in samples:
+        h.observe(float(v))
+    for q in (0.50, 0.90, 0.99):
+        true = float(np.quantile(samples, q))
+        est = h.percentile(q)
+        # ×2 buckets + linear interpolation: within half/double of truth
+        assert true / 2 <= est <= true * 2, (q, true, est)
+    snap = h.snapshot()
+    assert snap["count"] == len(samples)
+    assert snap["min"] == pytest.approx(samples.min())
+    assert snap["max"] == pytest.approx(samples.max())
+    assert snap["mean"] == pytest.approx(samples.mean(), rel=1e-6)
+
+
+def test_histogram_concurrent_observe():
+    h = Histogram()
+
+    def worker():
+        for _ in range(1000):
+            h.observe(0.001)
+
+    threads = [threading.Thread(target=worker) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert h.count == 4000
+    assert h.sum == pytest.approx(4.0)
+
+
+# ---------------------------------------------------------------------------
+# ledger
+# ---------------------------------------------------------------------------
+
+def test_ledger_jsonl_roundtrip(tmp_path):
+    path = str(tmp_path / "ledger.jsonl")
+    led = CostLedger(path)
+    s = Session(block_size=4, ledger=led)
+    rng = np.random.default_rng(0)
+    X = s.load(_sparse(rng, 8), name="X")
+    q = X.t().multiply(X).trace()
+    q.collect()
+    q.collect()                       # second run: warm plan, new row
+    led.close()
+    rows = CostLedger.load_rows(path)
+    assert len(rows) == 2
+    for row in rows:
+        assert row["schema"] == 1
+        assert row["predicted"]["flops"] > 0
+        assert row["measured"]["wall_s"] > 0
+        assert row["exec_path"] in ("staged_sparse", "staged", "eager")
+    # the warm run must not pay compile again
+    assert rows[1]["measured"]["compile_s"] == 0.0
+    # file round-trip == in-memory view
+    assert [r["measured"]["wall_s"] for r in rows] == \
+        [r["measured"]["wall_s"] for r in led.rows()]
+
+
+def test_ledger_summary_comm_ratio():
+    led = CostLedger()
+
+    class _Plan:
+        n_nodes = 3
+        mode = "dense"
+        n_workers = 1
+        est_flops = 100.0
+        total_comm_est = 0.0
+
+    led.record(query="q", plan=_Plan(), exec_path="staged",
+               wall_s=0.01, measured_comm=0)
+    summary = led.summary()
+    # zero predicted and zero measured = exact agreement, not 0/0
+    assert summary["comm_ratio"] == 1.0
+    assert summary["paths"]["staged"]["rows"] == 1
+
+
+def test_exec_path_of():
+    assert exec_path_of({"staged": 1}) == "staged"
+    assert exec_path_of({"staged_spmd": 1, "staged": 0}) == "staged_spmd"
+    assert exec_path_of({"node_evals": 5}) == "eager"
+
+
+# ---------------------------------------------------------------------------
+# engine integration + the no-retrace regression
+# ---------------------------------------------------------------------------
+
+def test_engine_trace_and_ledger(tmp_path):
+    from repro.serve.engine import ServeEngine
+    path = str(tmp_path / "serve_ledger.jsonl")
+    led = CostLedger(path)
+    s = Session(block_size=4)
+    rng = np.random.default_rng(1)
+    X = s.load(_sparse(rng, 8), name="X")
+    q = X.t().multiply(X)
+    with ServeEngine(s, n_threads=2, trace_sample=1.0,
+                     ledger=led, ledger_root_hits=True) as eng:
+        tickets = [eng.submit(q) for _ in range(4)]
+        eng.drain()
+        for t in tickets:
+            t.result(timeout=300.0)
+        snap = eng.snapshot()
+    led.close()
+    # every ticket carries a finished trace with the lifecycle phases
+    for t in tickets:
+        assert t.trace is not None and t.trace.root.t1 is not None
+    phases = set(tickets[0].trace.phase_names())
+    assert {"optimize", "lower", "execute"} <= phases
+    # repeats are root hits: their traces have no execute span
+    assert "execute" not in tickets[-1].trace.phase_names()
+    # snapshot: legacy keys + histogram summaries
+    assert snap["completed"] == 4
+    assert snap["latency"]["count"] == 4
+    assert snap["queue_wait"]["count"] == 4
+    assert snap["latency"]["p99"] >= snap["latency"]["p50"] > 0
+    # ledger: one row per executed plan, trace ids wired through
+    rows = CostLedger.load_rows(path)
+    assert len(rows) == 4
+    assert {r["exec_path"] for r in rows} <= \
+        {"staged_sparse", "staged", "eager", "root_hit"}
+    assert all(r["trace_id"] for r in rows)
+
+
+def test_tracing_adds_no_retraces():
+    """Turning the tracer on must never retrace a jitted plan: spans
+    wrap the staged call, they never enter the traced function."""
+    traces = {"n": 0}
+
+    def merge(x, y):
+        traces["n"] += 1               # counts jax traces, not calls
+        return x + y
+
+    s = Session(block_size=4)
+    rng = np.random.default_rng(2)
+    X = s.load(_sparse(rng, 8), name="X")
+    Y = s.load(_sparse(rng, 8), name="Y")
+    q = X.join(Y, "RID=RID AND CID=CID", MergeFn("obs_add", merge))
+    q.collect()
+    n_cold = traces["n"]
+    assert n_cold >= 1
+    q.collect()                        # warm, untraced
+    assert traces["n"] == n_cold
+    tr = TRACER.start("query", sample=True)
+    with TRACER.activate(tr):          # warm, traced
+        q.collect()
+    tr.finish()
+    assert traces["n"] == n_cold       # tracing did not retrace
+    assert len(tr.spans()) >= 2        # but spans were recorded
+
+
+def test_session_ledger_default_off():
+    s = Session(block_size=4)
+    assert s.ledger is None            # no ledger, no rows, no files
