@@ -7,11 +7,23 @@ bytes agree within 2x over the rows that measured both (single-device
 runs predict zero comm and emit zero collectives — exact agreement by
 the ledger's both-zero rule, so the gate is meaningful at any scale).
 
-    python benchmarks/check_ledger.py results/ledger.jsonl
+With ``--costmodel=PATH`` the gate additionally loads a fitted
+``costmodel.json`` (the one CI just fitted *from this very ledger* via
+``python -m repro.core.calibrate fit``) and requires its calibrated
+wall predictions to land within 2x of the measured walls at the
+median over the executed rows. In-sample by construction — the point
+is not generalization (the accuracy bench scores held-out queries),
+it is a smoke check that the whole chain ledger → corpus → fit →
+persist → reload → predict is wired and sane on CI's hardware.
+
+    python benchmarks/check_ledger.py results/ledger.jsonl \
+        [--costmodel=results/costmodel.json]
 """
 from __future__ import annotations
 
 import sys
+
+COSTMODEL_MAX_MEDLOG = 0.6931  # ln 2: within 2x at the median
 
 
 def check(path: str) -> int:
@@ -64,8 +76,60 @@ def check(path: str) -> int:
     return 0
 
 
+def check_costmodel(ledger_path: str, model_path: str) -> int:
+    import numpy as np
+
+    from repro.core.calibrate import CostModel, rows_to_corpus
+    from repro.obs.ledger import CostLedger
+
+    model = CostModel(model_path)
+    keys = model.fitted_devices()
+    if not keys:
+        print(f"[check_ledger] FAIL: {model_path} holds no fitted models")
+        return 1
+    corpus = rows_to_corpus(CostLedger.load_rows(ledger_path))
+    errs = []
+    for feats, wall in corpus:
+        p = model.predict(feats, device=keys[0])
+        if p is not None and wall > 0:
+            errs.append(abs(float(np.log(p / wall))))
+    if not errs:
+        print("[check_ledger] FAIL: no ledger rows usable for the "
+              "costmodel gate")
+        return 1
+    medlog = float(np.median(errs))
+    if medlog > COSTMODEL_MAX_MEDLOG:
+        print(f"[check_ledger] FAIL: calibrated median |log(pred/meas)| "
+              f"{medlog:.3f} > {COSTMODEL_MAX_MEDLOG:.3f} (2x) over "
+              f"{len(errs)} rows — the fit→persist→predict chain is "
+              f"miswired or the corpus walls are broken")
+        return 1
+    print(f"[check_ledger] OK: costmodel {keys[0]} within "
+          f"{float(np.exp(medlog)):.2f}x of measured walls at the median "
+          f"({len(errs)} rows)")
+    return 0
+
+
+def main(argv) -> int:
+    model_path = None
+    paths = []
+    for a in argv:
+        if a.startswith("--costmodel="):
+            model_path = a.split("=", 1)[1]
+        elif a.startswith("-"):
+            print(f"unknown flag {a!r}")
+            return 2
+        else:
+            paths.append(a)
+    if len(paths) != 1:
+        print("usage: check_ledger.py <ledger.jsonl> "
+              "[--costmodel=costmodel.json]")
+        return 2
+    rc = check(paths[0])
+    if rc == 0 and model_path is not None:
+        rc = check_costmodel(paths[0], model_path)
+    return rc
+
+
 if __name__ == "__main__":
-    if len(sys.argv) != 2:
-        print("usage: check_ledger.py <ledger.jsonl>")
-        raise SystemExit(2)
-    raise SystemExit(check(sys.argv[1]))
+    raise SystemExit(main(sys.argv[1:]))

@@ -128,6 +128,23 @@ class Computation:
             op.operand_names = names
 
 
+# Transcendental/special-function opcodes: far costlier than 1 flop/elem on
+# every backend, so the cost-model feature vector tracks them separately
+# (exactly what HloCostAnalysis's transcendental_count does).
+TRANSCENDENTAL_OPS = {
+    "exponential", "exponential-minus-one", "log", "log1p", "tanh",
+    "rsqrt", "sqrt", "cbrt", "power", "logistic", "atan2", "expm1",
+    "sin", "cos", "tan",
+}
+
+# The per-plan cost-model feature schema (shared with
+# ``repro.core.calibrate.FEATURES`` — a test pins the correspondence).
+# ``nnz`` is a plan-level notion with no HLO counterpart, so the HLO
+# extractor emits 0.0 for it.
+FEATURE_NAMES = ("dot_flops", "ew_flops", "bytes", "transcendentals",
+                 "comm_bytes", "nnz", "ops")
+
+
 @dataclasses.dataclass
 class HloStats:
     flops: float = 0.0
@@ -136,6 +153,8 @@ class HloStats:
     collective_breakdown: Dict[str, float] = dataclasses.field(
         default_factory=dict)
     dot_flops: float = 0.0
+    transcendentals: float = 0.0      # elements through transcendental ops
+    op_count: float = 0.0             # executed top-level ops (launches)
     while_trip_counts: Dict[str, int] = dataclasses.field(
         default_factory=dict)
     warnings: List[str] = dataclasses.field(default_factory=list)
@@ -145,9 +164,25 @@ class HloStats:
         self.bytes_accessed += other.bytes_accessed * k
         self.collective_bytes += other.collective_bytes * k
         self.dot_flops += other.dot_flops * k
+        self.transcendentals += other.transcendentals * k
+        self.op_count += other.op_count * k
         for op, b in other.collective_breakdown.items():
             self.collective_breakdown[op] = \
                 self.collective_breakdown.get(op, 0.0) + b * k
+
+    def feature_vector(self) -> Dict[str, float]:
+        """This module's stats as the cost-model feature schema
+        (``FEATURE_NAMES``): dot vs elementwise flops split, HBM traffic,
+        transcendental elements, collective bytes and launch count."""
+        return {
+            "dot_flops": self.dot_flops,
+            "ew_flops": max(self.flops - self.dot_flops, 0.0),
+            "bytes": self.bytes_accessed,
+            "transcendentals": self.transcendentals,
+            "comm_bytes": self.collective_bytes,
+            "nnz": 0.0,
+            "ops": self.op_count,
+        }
 
 
 def _split_computations(text: str) -> Tuple[Dict[str, Computation], str]:
@@ -437,6 +472,13 @@ def _analyze(comp: Computation, comps: Dict[str, Computation],
     for op in comp.ops:
         out_bytes = _shape_bytes(op.result_type)
         in_bytes = _op_in_bytes(op)
+        if op.opcode not in _SKIP_TRAFFIC:
+            # every executed op is (roughly) one kernel launch; a fusion is
+            # one launch regardless of its internals, while/call bodies add
+            # theirs via merged_scaled below
+            stats.op_count += 1.0
+        if op.opcode in TRANSCENDENTAL_OPS:
+            stats.transcendentals += _shape_numel(op.result_type)
         if op.opcode == "dot":
             f = _dot_flops(op)
             stats.flops += f
@@ -451,12 +493,14 @@ def _analyze(comp: Computation, comps: Dict[str, Computation],
                 stats.collective_breakdown.get(key, 0.0) + b
         elif op.opcode == "fusion":
             # the fusion op is a single group: boundary traffic is charged by
-            # _traffic at the call site; internals add flops/collectives only
+            # _traffic at the call site; internals add flops/collectives/
+            # transcendentals only (op_count stays 1 — one launch)
             m = _CALL_ATTR_RE.search(op.line)
             if m and m.group(1) in comps:
                 inner = _analyze(comps[m.group(1)], comps, memo)
                 stats.flops += inner.flops
                 stats.dot_flops += inner.dot_flops
+                stats.transcendentals += inner.transcendentals
                 stats.collective_bytes += inner.collective_bytes
                 for k2, v in inner.collective_breakdown.items():
                     stats.collective_breakdown[k2] = \

@@ -50,7 +50,7 @@ class Session:
     def __init__(self, block_size: int = 256, mode: str = "sparse",
                  use_bloom: bool = True, engine: str = "dag",
                  n_workers: Optional[int] = None, search: str = "memo",
-                 ledger=None):
+                 ledger=None, cost_model=None):
         if engine not in ("dag", "tree"):
             raise ValueError(f"unknown engine {engine!r}")
         if search not in ("memo", "greedy"):
@@ -66,6 +66,10 @@ class Session:
         # session executes through the DAG engine appends one
         # predicted-vs-actual row (the serving tier installs its own)
         self.ledger = ledger
+        # optional ``core.calibrate.CostModel``: candidate costing blends
+        # its calibrated wall-time prediction into ``physical_cost``
+        # (analytic-only when unset or unfitted for this device key)
+        self.cost_model = cost_model
         self._auto = 0
         self._mesh = None
         self._env_version = 0
@@ -138,8 +142,16 @@ class Session:
         t0 = time.perf_counter()
         out = ex.run(pplan)
         if self.ledger is not None:
+            import jax
             from repro.core.expr import signature
             from repro.obs.ledger import exec_path_of
+            try:
+                # dispatch is async: without a sync the recorded wall is
+                # launch overhead, not execution — a fitting corpus built
+                # from such rows sees every matmul cost the same 0.4ms
+                jax.block_until_ready(getattr(out, "value", out))
+            except Exception:
+                pass                           # host-side results (COO etc.)
             self.ledger.record(
                 query=signature(plan), plan=pplan,
                 exec_path=exec_path_of(ex.stats),
@@ -158,12 +170,22 @@ class Session:
         catalog version (bumped by ``load``): mutating a session setting
         or rebinding a leaf re-optimizes; value drift under an unchanged
         binding is caught downstream by the staged executor's overflow
-        guard."""
+        guard. The calibrated cost-model version is in the key too: a
+        (background) refit re-optimizes instead of serving decisions
+        made under retired coefficients."""
         search = search or self.search
         key = (plan, search, self._env_version, self.mode,
-               self.block_size, self.use_bloom, self.n_workers)
+               self.block_size, self.use_bloom, self.n_workers,
+               self._costmodel_key())
         return self._opt_cache.get_or_create(
             key, lambda: optmod.optimize(plan, search=search, session=self))
+
+    def _costmodel_key(self):
+        """Cache-key component for the calibrated cost model: identity +
+        fit version (bumped per successful refit)."""
+        if self.cost_model is None:
+            return None
+        return (id(self.cost_model), self.cost_model.version)
 
     def _optimized(self, plan: Expr) -> Expr:
         return self.optimize_result(plan).plan

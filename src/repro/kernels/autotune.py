@@ -117,21 +117,33 @@ def cached_tiles(kernel: str, shapes: Sequence[Sequence[int]], dtype: str,
     return dict(hit) if hit is not None else None  # callers may mutate
 
 
+def _timed_once(fn: Callable[[], object]) -> float:
+    """One wall-clock sample of ``fn()``, gc-collected first: without the
+    collect, whichever sample crosses the gen-2 GC threshold absorbs the
+    whole pause and the comparison between candidates (and the wall times
+    fed to the calibrated cost model's corpus) is polluted — the same
+    hardening as ``benchmarks.common.paired``."""
+    import gc
+
+    import jax
+    gc.collect()
+    t0 = time.perf_counter()
+    r = fn()
+    if r is not None:
+        jax.block_until_ready(r)
+    return time.perf_counter() - t0
+
+
 def time_candidate(fn: Callable[[], object], repeats: int = 2,
                    warmup: int = 1) -> float:
-    """Median wall seconds of ``fn()`` (which must block until ready)."""
+    """Median wall seconds of ``fn()`` (which must block until ready),
+    with a gc.collect before every timed sample (``_timed_once``)."""
     import jax
     for _ in range(warmup):
         r = fn()
         if r is not None:
             jax.block_until_ready(r)
-    ts = []
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        r = fn()
-        if r is not None:
-            jax.block_until_ready(r)
-        ts.append(time.perf_counter() - t0)
+    ts = [_timed_once(fn) for _ in range(repeats)]
     ts.sort()
     return ts[len(ts) // 2]
 
@@ -167,8 +179,7 @@ def best_tiles(kernel: str, shapes: Sequence[Sequence[int]], dtype: str,
     if runner is None or not grid:
         return dict(default)
 
-    best: Optional[Tiles] = None
-    best_t = float("inf")
+    cands = []
     seen = set()
     for cand in grid:
         cand = dict(cand)
@@ -176,14 +187,45 @@ def best_tiles(kernel: str, shapes: Sequence[Sequence[int]], dtype: str,
         if fp in seen:  # duplicate candidate (e.g. a pre-clamped grid)
             continue
         seen.add(fp)
+        cands.append(cand)
+    # warmup pass doubles as the rejection filter: a tile shape this
+    # backend/problem rejects drops out before any timing
+    alive = []
+    for cand in cands:
         try:
-            t = time_candidate(lambda: runner(cand), repeats=repeats)
+            import jax
+            r = runner(cand)
+            if r is not None:
+                jax.block_until_ready(r)
+            alive.append(cand)
         except Exception:
-            continue  # tile shape this backend/problem rejects
-        if t < best_t:
-            best, best_t = cand, t
-    if best is None:
+            continue
+    if not alive:
         return dict(default)
+    # interleaved timing (the paired-timing hardening from
+    # ``benchmarks.common.paired``): one gc-collected sample per candidate
+    # per round, visit order reversed every round, so drift — thermal,
+    # background load, GC debt — hits every candidate equally instead of
+    # biasing whichever happened to be timed during a quiet stretch
+    samples: list = [[] for _ in alive]
+    for rnd in range(max(repeats, 1)):
+        order = range(len(alive)) if rnd % 2 == 0 \
+            else range(len(alive) - 1, -1, -1)
+        for i in order:
+            cand = alive[i]
+            try:
+                samples[i].append(_timed_once(lambda: runner(cand)))
+            except Exception:
+                samples[i].append(float("inf"))
+
+    def median(ts) -> float:
+        ts = sorted(ts)
+        return ts[len(ts) // 2]
+
+    best_i = min(range(len(alive)), key=lambda i: median(samples[i]))
+    if median(samples[best_i]) == float("inf"):
+        return dict(default)
+    best = alive[best_i]
     _CACHE[key] = best
     if persist:
         try:

@@ -38,7 +38,11 @@ def serve_relational(args) -> int:
     from repro.serve import workload as wl
 
     rng = np.random.default_rng(args.seed)
-    session = Session(block_size=args.block_size)
+    cost_model = None
+    if args.costmodel_out or args.refit_every:
+        from repro.core.calibrate import CostModel
+        cost_model = CostModel(args.costmodel_out or None)
+    session = Session(block_size=args.block_size, cost_model=cost_model)
     mats = wl.synthetic_catalog(session, rng, n=args.dim)
     templates = wl.query_templates(mats)
     stream = wl.client_stream(rng, templates, n_clients=args.clients,
@@ -46,7 +50,9 @@ def serve_relational(args) -> int:
     print(f"[serve] catalog={list(mats)} templates={len(templates)} "
           f"clients={args.clients} tenants={args.tenants}")
     ledger = None
-    if args.ledger_out or args.metrics_out:
+    if args.ledger_out or args.metrics_out or args.refit_every:
+        # refit without an explicit output still needs the in-memory
+        # rows as its fitting corpus
         ledger = CostLedger(args.ledger_out or None)
     snapshots = {}
     for cse in (True, False):
@@ -55,14 +61,21 @@ def serve_relational(args) -> int:
                             tenant_max_inflight=args.tenant_inflight,
                             trace_sample=args.trace_sample,
                             ledger=ledger,
-                            measure_comm=args.measure_comm)
+                            measure_comm=args.measure_comm,
+                            refit_every=args.refit_every)
         st = r["stats"]
         snapshots[f"cse_{'on' if cse else 'off'}"] = st
         print(f"[serve] cse={'on ' if cse else 'off'} "
               f"qps={r['qps']:.0f} p50={r['p50_ms']:.2f}ms "
               f"p99={r['p99_ms']:.2f}ms root_hits={st['root_hits']} "
               f"shared_nodes={st['inter_query_cse_nodes']} "
-              f"leaf_scans={st['leaf_scans']}/{st['leaf_refs']}")
+              f"leaf_scans={st['leaf_scans']}/{st['leaf_refs']}"
+              + (f" refits={st['refits']}" if args.refit_every else ""))
+    if cost_model is not None and args.costmodel_out:
+        path = cost_model.save()
+        print(f"[serve] cost model v{cost_model.version} "
+              f"({', '.join(cost_model.fitted_devices()) or 'unfitted'})"
+              f" → {path}")
     if args.metrics_out:
         out = {"engine": snapshots}
         if ledger is not None:
@@ -151,6 +164,13 @@ def main(argv=None) -> int:
     ap.add_argument("--measure-comm", action="store_true",
                     help="record measured collective bytes in ledger "
                          "rows (HLO-derived on a mesh, 0 off-mesh)")
+    ap.add_argument("--refit-every", type=int, default=None,
+                    help="online calibration: background-refit the "
+                         "session cost model every N executed plans "
+                         "from the accumulated ledger rows")
+    ap.add_argument("--costmodel-out", default=None,
+                    help="persist fitted cost-model coefficients "
+                         "(core.calibrate) to this JSON at exit")
     # LM serving
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--smoke", action="store_true")

@@ -11,8 +11,11 @@ single-device host the driver re-execs itself in a subprocess with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the same trick
 the distributed tests use; see ``tests/spmd_check.py``).
 
-    PYTHONPATH=src python -m repro.obs.demo --workers 4 \
-        --ledger-out results/demo_ledger.jsonl --json
+    PYTHONPATH=src python -m repro.obs.demo --workers 4 --json
+
+The demo ledger lands in a tempdir by default (deleted on exit) so demo
+runs never litter the checkout; pass ``--ledger-out PATH`` to keep the
+JSONL somewhere, or ``--ledger-out ''`` for in-memory only.
 
 ``--json`` appends one machine-readable line (``DEMO_JSON {...}``) with
 the covered phase names and the ledger summary — CI greps it.
@@ -24,6 +27,7 @@ import json
 import os
 import subprocess
 import sys
+import tempfile
 
 EXPECTED_PHASES = (
     "lower", "optimize", "physical_cost", "schemes_dp",
@@ -100,7 +104,10 @@ def run_demo(workers: int, ledger_path: str, emit_json: bool) -> int:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--workers", type=int, default=4)
-    ap.add_argument("--ledger-out", default="results/demo_ledger.jsonl")
+    ap.add_argument("--ledger-out", default=None,
+                    help="keep the demo ledger JSONL at this path "
+                         "(default: a tempdir, deleted on exit; '' for "
+                         "in-memory only)")
     ap.add_argument("--json", action="store_true")
     ap.add_argument("--no-respawn", action="store_true",
                     help="fail instead of re-execing when the host has "
@@ -116,6 +123,13 @@ def main(argv=None) -> int:
         sub = [a for a in (argv if argv is not None else sys.argv[1:])
                if a != "--no-respawn"]
         return _respawn(sub + ["--no-respawn"], args.workers)
+    if args.ledger_out is None:
+        # default: a throwaway location — the demo must not write
+        # artifacts into the checkout (CI uploads real serve ledgers)
+        with tempfile.TemporaryDirectory(prefix="repro-demo-") as td:
+            return run_demo(args.workers,
+                            os.path.join(td, "demo_ledger.jsonl"),
+                            args.json)
     return run_demo(args.workers, args.ledger_out, args.json)
 
 

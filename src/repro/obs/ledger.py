@@ -16,8 +16,9 @@ Row schema (versioned; ``docs/observability.md``):
      "query": <root signature>, "plan_nodes": N, "mode": "sparse|dense",
      "n_workers": W, "exec_path": "staged|staged_sparse|eager|
      eager_reuse|root_hit|tree", "predicted": {"flops", "comm_entries",
-     "comm_bytes", "nnz"}, "measured": {"wall_s", "compile_s",
-     "comm_bytes", "nnz", "overflow"}}
+     "comm_bytes", "nnz", "features": {core.calibrate.FEATURES}},
+     "measured": {"wall_s", "compile_s", "comm_bytes", "nnz",
+     "overflow"}}
 
 Writers hold an internal lock per append, so many engine worker threads
 can share one ledger; rows are also kept in a bounded in-memory deque for
@@ -55,12 +56,20 @@ def predicted_of(plan, opt=None) -> Dict[str, Any]:
     cached = getattr(plan, "_ledger_predicted", None)
     if cached is not None and cached[0] == nnz_key:
         return cached[1]
+    from repro.core.calibrate import features_from_plan
     from repro.plan.schemes import ENTRY_BYTES
     out = {
         "flops": float(plan.est_flops),
         "comm_entries": float(plan.total_comm_est),
         "comm_bytes": float(plan.total_comm_est) * ENTRY_BYTES,
         "nnz": nnz_key,
+        # the calibrated cost model's feature vector (core.calibrate):
+        # persisted per row so the serving ledger doubles as the fitting
+        # corpus — measured wall_s lands beside these in the same row;
+        # best-effort: a partial plan (no node list) records without it
+        # rather than failing the row
+        "features": (features_from_plan(plan, nnz=nnz_key)
+                     if hasattr(plan, "nodes") else None),
     }
     plan._ledger_predicted = (nnz_key, out)
     return out

@@ -166,6 +166,7 @@ class ServeEngine:
         "root_hits", "node_reuses", "node_evals",
         "inter_query_cse_nodes",
         "leaf_scans", "leaf_refs", "batches",
+        "refits", "refit_rows",
     )
 
     def __init__(self, session, *, n_threads: int = 2, max_queue: int = 1024,
@@ -177,7 +178,8 @@ class ServeEngine:
                  registry: Optional[MetricsRegistry] = None,
                  trace_sample: Optional[float] = None,
                  ledger=None, ledger_root_hits: bool = False,
-                 measure_comm: bool = False):
+                 measure_comm: bool = False,
+                 refit_every: Optional[int] = None):
         self.session = session
         self.cse = cse
         self.max_queue = max_queue
@@ -204,12 +206,32 @@ class ServeEngine:
         self.ledger = ledger
         self.ledger_root_hits = ledger_root_hits
         self.measure_comm = measure_comm
+        # online calibration: with a ledger AND a session cost model,
+        # every ``refit_every`` executed (ledgered) plans a background
+        # daemon thread re-fits the model from the accumulated rows. A
+        # drift-exceeding fit bumps ``cost_model.version``, which is
+        # part of the state key below — new queries admit the refreshed
+        # coefficients while in-flight queries keep the version-state
+        # they started against (the same retire machinery a catalog
+        # rebind uses). The trigger interval backs off exponentially
+        # while fits keep converging (no version bump) and snaps back
+        # to ``refit_every`` on a bump: a converged model stops paying
+        # fit CPU against the serving threads, a regime change is
+        # tracked closely again.
+        self.refit_every = refit_every
+        self._refit_rows_seen = 0
+        self._refit_interval = refit_every
+        self._refit_last_at = 0
+        self._refit_lock = threading.Lock()
+        self._refit_thread: Optional[threading.Thread] = None
         self._results = VersionedLRU(result_entries,
                                      tenant_budget=tenant_result_budget,
                                      name="results", registry=self.metrics)
         self._counters = {name: self.metrics.counter("serve_" + name)
                           for name in self._COUNTERS}
         self._arena_nodes = self.metrics.gauge("serve_arena_nodes")
+        self._costmodel_version = self.metrics.gauge(
+            "serve_costmodel_version")
         self._latency = self.metrics.histogram("serve_latency_s")
         self._queue_wait = self.metrics.histogram("serve_queue_wait_s")
         self._states: "deque[_VersionState]" = deque(maxlen=keep_versions)
@@ -308,7 +330,8 @@ class ServeEngine:
         import os
         s = self.session
         return (version, s.mode, s.block_size, s.use_bloom, s.n_workers,
-                s._mesh_key(), os.environ.get("REPRO_KERNEL_BACKEND"))
+                s._mesh_key(), os.environ.get("REPRO_KERNEL_BACKEND"),
+                s._costmodel_key())
 
     def _current_state(self) -> _VersionState:
         """The shared state for the catalog as of *now*. The version is
@@ -565,6 +588,71 @@ class ServeEngine:
             measured_comm=measured_comm, overflow=overflow,
             opt=ticket.opt, trace_id=ticket.trace_id,
             tenant=ticket.tenant)
+        if exec_path != "root_hit":
+            self._maybe_refit()
+
+    # -- online calibration ---------------------------------------------------
+
+    # Each background refit fits from at most this many of the ledger's
+    # most recent rows: bounded work per fit (a full-history refit would
+    # grow O(n) per trigger, O(n²) over a serving session) that also
+    # weights the fit toward the current workload regime.
+    REFIT_WINDOW_ROWS = 512
+
+    # Convergence backoff cap: while successive fits stay within the
+    # model's drift threshold (no version bump) the trigger interval
+    # doubles per fit, up to refit_every * this factor.
+    REFIT_BACKOFF_MAX = 32
+
+    def _maybe_refit(self) -> None:
+        """Count one executed (ledgered) plan; when the backoff interval
+        has elapsed, kick a background refit of the session cost model
+        from the tail window of the ledger's in-memory rows. The hot
+        path pays one lock + counter — fitting happens off-thread, and
+        at most one refit runs at a time (a still-running fit skips the
+        trigger rather than queue)."""
+        if (self.refit_every is None
+                or getattr(self.session, "cost_model", None) is None):
+            return
+        with self._refit_lock:
+            self._refit_rows_seen += 1
+            if (self._refit_rows_seen - self._refit_last_at
+                    < self._refit_interval):
+                return
+            if (self._refit_thread is not None
+                    and self._refit_thread.is_alive()):
+                return
+            self._refit_last_at = self._refit_rows_seen
+            rows = self.ledger.rows()[-self.REFIT_WINDOW_ROWS:]
+            t = threading.Thread(target=self._refit, args=(rows,),
+                                 daemon=True, name="serve-refit")
+            self._refit_thread = t
+            t.start()
+
+    def _refit(self, rows) -> None:
+        model = self.session.cost_model
+        v0 = model.version
+        try:
+            ok = model.fit_from_rows(rows)
+        except Exception:
+            ok = False
+        if not ok:
+            return
+        self._counters["refits"].inc()
+        self._counters["refit_rows"].inc(len(rows))
+        self._costmodel_version.set(model.version)
+        with self._refit_lock:
+            if model.version != v0:         # regime change: track closely
+                self._refit_interval = self.refit_every
+            else:                           # converged: back off
+                self._refit_interval = min(
+                    self._refit_interval * 2,
+                    self.refit_every * self.REFIT_BACKOFF_MAX)
+        if model.path:
+            try:
+                model.save()
+            except OSError:
+                pass  # persistence is best-effort; serving keeps going
 
     def _run_staged(self, state: _VersionState,
                     lw: buildermod.SharedLowering):

@@ -1,0 +1,251 @@
+"""Calibrated cost model: fitting, blending, persistence, online refit."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import Session
+from repro.core.calibrate import (
+    FEATURES, CostModel, default_costmodel_path, device_key,
+    features_from_plan, rows_to_corpus,
+)
+from repro.core.cost import PhysicalCost, physical_cost
+from repro.obs.ledger import CostLedger
+
+
+def _synthetic_corpus(n=32, seed=0):
+    """Feature vectors with walls from a known linear law + noise."""
+    rng = np.random.default_rng(seed)
+    corpus = []
+    for _ in range(n):
+        f = {
+            "dot_flops": float(rng.uniform(1e5, 1e8)),
+            "ew_flops": float(rng.uniform(1e3, 1e6)),
+            "bytes": float(rng.uniform(1e4, 1e7)),
+            "transcendentals": 0.0,
+            "comm_bytes": 0.0,
+            "nnz": float(rng.uniform(1e2, 1e5)),
+            "ops": float(rng.integers(1, 20)),
+        }
+        wall = (f["dot_flops"] / 1e9 + f["bytes"] / 1e10
+                + f["ops"] * 1e-4 + 1e-4)
+        corpus.append((f, wall * float(rng.uniform(0.95, 1.05))))
+    return corpus
+
+
+def test_fit_predict_roundtrip():
+    model = CostModel()
+    assert model.predict({k: 1.0 for k in FEATURES}) is None
+    assert model.alpha() == 1.0                    # cold: pure analytic
+    assert model.fit(_synthetic_corpus())
+    assert model.version == 1
+    errs = []
+    for f, w in _synthetic_corpus(seed=1):         # held-out draw
+        p = model.predict(f)
+        assert p is not None and p > 0
+        errs.append(abs(np.log(p / w)))
+    assert float(np.median(errs)) < 0.25
+    assert model.alpha() < 1.0
+
+
+def test_fit_refuses_thin_corpus():
+    model = CostModel()
+    assert not model.fit(_synthetic_corpus(n=3))
+    assert model.version == 0
+    assert model.predict({k: 1.0 for k in FEATURES}) is None
+
+
+def test_device_key_isolation():
+    """Coefficients fitted for another device kind must not predict."""
+    model = CostModel()
+    assert model.fit(_synthetic_corpus(), device="tpu:v9|default")
+    assert model.predict({k: 1.0 for k in FEATURES},
+                         device=device_key()) is None
+    assert model.alpha(device=device_key()) == 1.0
+    assert model.predict({k: 1.0 for k in FEATURES},
+                         device="tpu:v9|default") is not None
+
+
+def test_save_load_schema(tmp_path):
+    path = str(tmp_path / "costmodel.json")
+    model = CostModel(path)
+    assert model.fit(_synthetic_corpus())
+    model.save()
+    blob = json.loads((tmp_path / "costmodel.json").read_text())
+    assert blob["_schema"] == 1
+    key = device_key()
+    assert list(blob["models"][key]["features"]) == list(FEATURES)
+    loaded = CostModel.load(path)
+    f = _synthetic_corpus(n=1, seed=7)[0][0]
+    assert loaded.predict(f) == pytest.approx(model.predict(f))
+
+
+def test_load_rejects_unknown_schema(tmp_path):
+    path = tmp_path / "costmodel.json"
+    path.write_text(json.dumps({"_schema": 99, "models": {}}))
+    model = CostModel(str(path))
+    assert model.predict({k: 1.0 for k in FEATURES}) is None
+
+
+def test_default_path_beside_autotune():
+    assert default_costmodel_path().endswith("costmodel.json")
+
+
+def test_features_from_plan_dense_dot_flops():
+    """The feature extractor charges DENSE matmul flops: the analytic
+    cost scales by operand sparsity, but the dense backend executes the
+    full 2mkn regardless — the central miscalibration the fitted model
+    corrects."""
+    rng = np.random.default_rng(0)
+    s = Session(block_size=8, mode="dense")
+    a = rng.normal(size=(32, 64)).astype(np.float32)
+    a[rng.uniform(size=a.shape) > 0.01] = 0.0      # ~1% dense
+    A = s.load(a, "A")
+    B = s.load(rng.normal(size=(64, 16)).astype(np.float32), "B")
+    plan = s.physical_plan(A.multiply(B).plan)
+    fv = features_from_plan(plan)
+    assert fv["dot_flops"] == 2 * 32 * 64 * 16     # density-independent
+    assert set(fv) == set(FEATURES)
+    assert fv["ops"] >= 1
+
+
+def test_ledger_rows_carry_features():
+    rng = np.random.default_rng(0)
+    led = CostLedger()
+    s = Session(block_size=8, ledger=led)
+    A = s.load(rng.normal(size=(16, 16)).astype(np.float32), "A")
+    A.multiply(A).collect()
+    rows = led.rows()
+    assert rows and set(rows[0]["predicted"]["features"]) == set(FEATURES)
+    corpus = rows_to_corpus(rows)
+    assert len(corpus) == len(rows)
+    assert all(w > 0 for _, w in corpus)
+
+
+def test_rows_to_corpus_filters():
+    feat = {k: 1.0 for k in FEATURES}
+    rows = [
+        {"exec_path": "root_hit",
+         "predicted": {"features": feat}, "measured": {"wall_s": 1.0}},
+        {"exec_path": "staged", "predicted": {},
+         "measured": {"wall_s": 1.0}},            # pre-PR-8 row
+        {"exec_path": "staged",
+         "predicted": {"features": feat}, "measured": {"wall_s": 0.0}},
+        {"exec_path": "staged",
+         "predicted": {"features": feat}, "measured": {"wall_s": 0.5}},
+    ]
+    assert rows_to_corpus(rows) == [(feat, 0.5)]
+
+
+def test_physical_cost_blends_when_fitted():
+    rng = np.random.default_rng(0)
+    model = CostModel()
+    s = Session(block_size=8, cost_model=model)
+    A = s.load(rng.normal(size=(16, 16)).astype(np.float32), "A")
+    e = A.multiply(A).plan
+    cold = physical_cost(e, s)
+    assert cold.calibrated_s is None and cold.alpha == 1.0
+    assert cold.total == cold.analytic
+    assert model.fit(_synthetic_corpus())
+    warm = physical_cost(e, s)
+    assert warm.calibrated_s is not None and warm.alpha < 1.0
+    assert warm.analytic == cold.analytic
+    assert "cal=" in warm.breakdown()
+    assert "cal=" not in cold.breakdown()
+
+
+def test_physical_cost_total_blend_math():
+    pc = PhysicalCost(flops=100.0, comm=0.0, nnz=0.0,
+                      calibrated_s=2e-6, alpha=0.5)
+    from repro.core.calibrate import calibrated_unit_flops
+    want = 0.5 * 100.0 + 0.5 * 2e-6 * calibrated_unit_flops()
+    assert pc.total == pytest.approx(want)
+    # alpha=1 short-circuits to analytic even with a prediction attached
+    assert PhysicalCost(100.0, 0.0, 0.0, 2e-6, 1.0).total == 100.0
+
+
+def test_session_opt_cache_invalidated_by_refit():
+    """A model refit (version bump) must re-optimize: decisions made
+    under retired coefficients may no longer be the cheapest."""
+    rng = np.random.default_rng(0)
+    model = CostModel()
+    s = Session(block_size=8, cost_model=model)
+    A = s.load(rng.normal(size=(16, 16)).astype(np.float32), "A")
+    e = A.multiply(A).plan
+    r1 = s.optimize_result(e)
+    assert s.optimize_result(e) is r1              # memoized
+    assert model.fit(_synthetic_corpus())
+    r2 = s.optimize_result(e)
+    assert r2 is not r1                            # version bump → re-opt
+    assert r2.physical.calibrated_s is not None
+
+
+def test_explain_shows_analytic_vs_calibrated():
+    rng = np.random.default_rng(0)
+    model = CostModel()
+    model.fit(_synthetic_corpus())
+    s = Session(block_size=8, cost_model=model)
+    A = s.load(rng.normal(size=(16, 16)).astype(np.float32), "A")
+    txt = A.multiply(A).explain(physical=True)
+    assert "analytic=" in txt and "calibrated=" in txt
+    assert "alpha=" in txt
+
+
+def test_serve_engine_background_refit():
+    from repro.serve.engine import ServeEngine
+    rng = np.random.default_rng(0)
+    model = CostModel()
+    led = CostLedger()
+    s = Session(block_size=8, cost_model=model)
+    A = s.load(rng.normal(size=(16, 16)).astype(np.float32), "A")
+    B = s.load(rng.normal(size=(16, 16)).astype(np.float32), "B")
+    queries = [A.multiply(B), A.multiply(B).trace(), A.add(B),
+               B.multiply(A), A.multiply(B).sum("r"), B.add(A),
+               A.t().multiply(B), B.t().multiply(A), A.emul(B),
+               A.multiply(B).add(1.0)]
+    with ServeEngine(s, n_threads=2, ledger=led, refit_every=4,
+                     cse=False) as eng:
+        for q in queries:
+            eng.run(q, timeout=60.0)
+        eng.drain()
+        t = eng._refit_thread
+        if t is not None:
+            t.join(timeout=60.0)
+        snap = eng.snapshot()
+    assert snap["refits"] >= 1
+    assert snap["refit_rows"] >= 8
+    assert model.version >= 1
+
+
+def test_serve_state_key_carries_model_version():
+    from repro.serve.engine import ServeEngine
+    rng = np.random.default_rng(0)
+    model = CostModel()
+    s = Session(block_size=8, cost_model=model)
+    s.load(rng.normal(size=(8, 8)).astype(np.float32), "A")
+    with ServeEngine(s, n_threads=1) as eng:
+        k1 = eng._state_key(s._env_version)
+        assert model.fit(_synthetic_corpus())
+        k2 = eng._state_key(s._env_version)
+    assert k1 != k2
+
+
+def test_calibrate_cli_fit(tmp_path):
+    """The CLI fits from a ledger JSONL and persists costmodel.json."""
+    from repro.core import calibrate as calmod
+    ledger_path = str(tmp_path / "ledger.jsonl")
+    led = CostLedger(ledger_path)
+    rng = np.random.default_rng(0)
+    s = Session(block_size=8, ledger=led)
+    A = s.load(rng.normal(size=(16, 16)).astype(np.float32), "A")
+    B = s.load(rng.normal(size=(16, 16)).astype(np.float32), "B")
+    for q in (A.multiply(B), A.add(B), A.t().multiply(B), A.emul(B),
+              B.multiply(A), A.multiply(B).trace(), B.add(A),
+              A.multiply(B).sum("c")):
+        q.collect()
+    led.close()
+    out = str(tmp_path / "costmodel.json")
+    rc = calmod._main(["fit", "--ledger", ledger_path, "--out", out])
+    assert rc == 0
+    blob = json.loads((tmp_path / "costmodel.json").read_text())
+    assert device_key() in blob["models"]
