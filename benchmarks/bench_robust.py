@@ -1,0 +1,148 @@
+"""Robustness-tier benchmark: fault-injection guard overhead + chaos run.
+
+Two questions, one acceptance gate each (docs/robustness.md):
+
+1. **Guard overhead** — every failure seam now calls
+   ``runtime.faults.check`` and every ticket carries deadline state. On a
+   fault-free run (the shipped configuration) that instrumentation must
+   be invisible: paired timing (interleaved arms, GC-collected samples —
+   ``common.paired``) of the zipf serving workload with *no* fault plan
+   vs a fully-armed plan whose specs all have ``p=0`` (every seam
+   consults its schedule, nothing ever fires, deadlines enabled).
+   Acceptance: min-wall overhead <= 2% net of the measured noise floor
+   (an off-vs-off pairing reported in the same row — per-run wall has a
+   ~4% CV on shared CPU, so the gate must be read against the floor).
+
+2. **Bounded degradation** — the same workload under a real storm
+   (compile faults + a worker kill + flaky ledger IO) must lose nothing:
+   zero hung tickets, completed+errors == submitted, and p99 inflated by
+   a bounded factor rather than collapsing into timeouts.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import paired, row, timeit
+from repro.core import Session
+from repro.obs.ledger import CostLedger
+from repro.runtime import faults
+from repro.serve import workload as wl
+
+N_CLIENTS = 2000
+N_TENANTS = 8
+N_THREADS = 2
+DIM = 48
+REPEATS = 7
+
+# every scope armed, nothing ever fires: the pure cost of consulting the
+# schedule at each seam (plus per-ticket deadline bookkeeping)
+ARMED_SILENT = ";".join(f"{s}:p=0.0" for s in faults.SCOPES)
+
+# the chaos arm: transient compile faults, one worker kill, flaky ledger
+# IO — the same storm shape the CI chaos job runs through launch.serve
+CHAOS = ("stage_compile:p=0.2,seed=3;worker:kind=kill,times=1;"
+         "ledger_io:p=0.3,seed=5;prewarm:every=3")
+
+
+def run(rng) -> None:
+    session = Session(block_size=8)
+    mats = wl.synthetic_catalog(session, rng, n=DIM)
+    templates = wl.query_templates(mats)
+    stream = wl.client_stream(rng, templates, n_clients=N_CLIENTS,
+                              n_tenants=N_TENANTS)
+    samples = {}
+
+    def serve(tag, plan_text=None, **kw):
+        faults.uninstall()
+        if plan_text is not None:
+            faults.install(faults.parse(plan_text))
+        try:
+            r = wl.run_workload(session, stream, cse=True,
+                                n_threads=N_THREADS, **kw)
+        finally:
+            faults.uninstall()
+        if tag is not None:
+            samples.setdefault(tag, []).append(r)
+        return r["wall_s"]
+
+    # -- 1. guard overhead (paired; statistic = min wall) --------------------
+    # per-*query* latency percentiles in a saturated-queue workload are
+    # dominated by queue position and batching phase; even the per-run
+    # wall has a ~4% CV on a shared CPU. The overhead estimate therefore
+    # compares each arm's *minimum* wall (the classic cost-floor
+    # statistic: scheduling noise only ever adds time, so the minima
+    # converge to the true per-arm cost), over interleaved GC-disciplined
+    # samples (``common.paired`` — its medians are discarded in favor of
+    # the minima). The off-vs-off pairing below reports the noise floor
+    # this gate is read against.
+    paired(lambda: serve("off"),
+           lambda: serve("armed", ARMED_SILENT, deadline_s=600.0),
+           repeats=REPEATS)
+    paired(lambda: serve("off2"), lambda: serve("off3"),
+           repeats=REPEATS)
+
+    def wall_min(tag):
+        return float(min(r["wall_s"] for r in samples[tag]))
+
+    t_off, t_armed = wall_min("off"), wall_min("armed")
+    overhead_pct = (t_armed - t_off) / t_off * 100
+    floor_pct = abs(wall_min("off3") - wall_min("off2")) \
+        / wall_min("off2") * 100
+    p50_off = float(np.median([r["p50_ms"] for r in samples["off"]]))
+    p50_armed = float(np.median([r["p50_ms"] for r in samples["armed"]]))
+    qps_off = N_CLIENTS / t_off
+    qps_armed = N_CLIENTS / t_armed
+
+    # the bare seam, microbenchmarked: µs per 1000 check() calls with no
+    # plan installed (one env read) vs the armed-silent plan (schedule
+    # consulted, PRNG advanced, never fires)
+    def checks():
+        for _ in range(1000):
+            faults.check("execute", attempt=0)
+    faults.uninstall()
+    us_noplan = timeit(checks, repeats=5) / 1000
+    faults.install(faults.parse(ARMED_SILENT))
+    us_armed = timeit(checks, repeats=5) / 1000
+    faults.uninstall()
+
+    row("robust_unarmed_qps", t_off * 1e6 / N_CLIENTS,
+        f"qps={qps_off:.0f} clients={N_CLIENTS} threads={N_THREADS}")
+    row("robust_armed_qps", t_armed * 1e6 / N_CLIENTS,
+        f"qps={qps_armed:.0f} armed=p0-all-scopes+deadlines")
+    row("robust_guard_overhead", None,
+        f"overhead_pct={overhead_pct:+.2f} floor_pct={floor_pct:.2f} "
+        f"p50_off_ms={p50_off:.3f} p50_armed_ms={p50_armed:.3f} "
+        f"(acceptance: min-wall overhead <=2% net of noise floor)")
+    row("robust_check_us", us_armed,
+        f"per_call_armed_us={us_armed:.3f} "
+        f"per_call_noplan_us={us_noplan:.3f}")
+
+    # -- 2. chaos storm: nothing lost, p99 bounded ---------------------------
+    # the ledger needs a real sink: ledger_io faults only fire on the
+    # file-write path, so a memory-only CostLedger would never drop
+    with tempfile.TemporaryDirectory() as td:
+        ledger = CostLedger(os.path.join(td, "chaos_ledger.jsonl"))
+        faults.uninstall()
+        faults.install(faults.parse(CHAOS))
+        try:
+            r = wl.run_workload(session, stream, cse=True,
+                                n_threads=N_THREADS, ledger=ledger,
+                                retry_backoff_s=0.001)
+        finally:
+            faults.uninstall()
+            ledger.close()
+    st = r["stats"]
+    complete = st["completed"] + st["errors"] == st["submitted"]
+    p99_ratio = r["p99_ms"] / max(p50_off, 1e-9)  # vs clean p50 floor
+    row("robust_chaos_storm", r["wall_s"] * 1e6 / N_CLIENTS,
+        f"hung={r['hung']} failures={r['failures']} "
+        f"complete={'yes' if complete else 'NO'} "
+        f"worker_restarts={st['worker_restarts']} "
+        f"degraded_eager={st['degraded_eager']} "
+        f"exec_retries={st['exec_retries']} "
+        f"dropped_writes={ledger.dropped_writes} "
+        f"p99_ms={r['p99_ms']:.2f} p99_vs_clean_p50={p99_ratio:.1f}x "
+        f"(acceptance: hung=0, complete=yes)")

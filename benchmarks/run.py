@@ -18,6 +18,9 @@ Prints ``name,us_per_call,derived`` CSV rows. Mapping to the paper:
                           cross-query CSE (1k-client zipf workload)
     bench_obs           — (beyond paper) tracer overhead on the serving
                           workload (paired traced vs untraced timing)
+    bench_robust        — (beyond paper) fault-injection guard overhead
+                          (paired armed-silent vs off) + chaos storm
+                          completeness/p99
     bench_cost_model    — (beyond paper) calibrated cost model: held-out
                           prediction accuracy vs analytic, plan-flip
                           gate, online-refit p50 overhead
@@ -86,16 +89,16 @@ def main() -> None:
         bench_agg_gram, bench_cost_model, bench_cross_product,
         bench_dist_comm, bench_join_dims, bench_join_entries,
         bench_join_single, bench_obs, bench_optimizer, bench_plan_cse,
-        bench_pnmf, bench_roofline, bench_select_lr, bench_serve,
-        bench_sparse_join,
+        bench_pnmf, bench_robust, bench_roofline, bench_select_lr,
+        bench_serve, bench_sparse_join,
     )
     from benchmarks.common import ROWS, row
 
     mods = [bench_agg_gram, bench_select_lr, bench_cross_product,
             bench_join_dims, bench_join_single, bench_join_entries,
             bench_pnmf, bench_plan_cse, bench_optimizer, bench_sparse_join,
-            bench_serve, bench_obs, bench_cost_model, bench_dist_comm,
-            bench_roofline]
+            bench_serve, bench_obs, bench_robust, bench_cost_model,
+            bench_dist_comm, bench_roofline]
     only, json_path = _parse_args(sys.argv[1:])
     print("name,us_per_call,derived")
     t0 = time.time()

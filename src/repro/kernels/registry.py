@@ -39,11 +39,14 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import threading
+import time
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 
 from repro.kernels import compat
+from repro.runtime import faults
 
 DENSE = "dense"
 INTERPRET = "pallas-interpret"
@@ -52,6 +55,8 @@ BACKENDS = (DENSE, INTERPRET, TPU)
 
 _BACKEND_ENV = "REPRO_KERNEL_BACKEND"
 _AUTOTUNE_ENV = "REPRO_AUTOTUNE"
+_BREAKER_THRESHOLD_ENV = "REPRO_BREAKER_THRESHOLD"
+_BREAKER_COOLDOWN_ENV = "REPRO_BREAKER_COOLDOWN"
 
 
 @dataclasses.dataclass
@@ -169,6 +174,109 @@ def planned_backend(name: str, backend: Optional[str] = None) -> str:
     return resolve_backend(name, backend)
 
 
+class CircuitBreaker:
+    """Per-backend dispatch circuit breaker (closed → open → half-open).
+
+    ``record_failure`` counts *consecutive* dispatch failures per
+    non-dense backend; at ``threshold`` the backend is quarantined
+    (``open``): ``quarantined()`` turns true and dispatch degrades to the
+    dense oracle without attempting the backend at all. After
+    ``cooldown_s`` the breaker goes half-open — exactly one in-flight
+    probe dispatch is re-admitted; its success closes the breaker, its
+    failure re-opens it (fresh cooldown). Every transition feeds the
+    metrics registry (``kernel_breaker_*{backend=...}``), so the serving
+    tier's snapshot shows quarantines as they happen.
+
+    The dense backend is never quarantined: it is the semantic oracle and
+    the fallback target — its failures always propagate.
+    """
+
+    def __init__(self, threshold: int = 3, cooldown_s: float = 30.0,
+                 clock: Callable[[], float] = time.monotonic,
+                 registry=None):
+        self.threshold = threshold
+        self.cooldown_s = cooldown_s
+        self.clock = clock
+        self._lock = threading.Lock()
+        # backend → [consecutive_failures, opened_at|None, probing]
+        self._state: Dict[str, list] = {}
+        if registry is None:
+            from repro.obs.metrics import REGISTRY as registry
+        self._registry = registry
+
+    def _entry(self, backend: str) -> list:
+        return self._state.setdefault(backend, [0, None, False])
+
+    def state(self, backend: str) -> str:
+        with self._lock:
+            ent = self._entry(backend)
+            if ent[1] is None:
+                return "closed"
+            if self.clock() - ent[1] >= self.cooldown_s:
+                return "half-open"
+            return "open"
+
+    def quarantined(self, backend: str) -> bool:
+        """True when dispatch must skip ``backend`` right now. In the
+        half-open window the first caller is admitted as the probe and
+        subsequent callers stay quarantined until the probe resolves."""
+        if backend == DENSE:
+            return False
+        with self._lock:
+            ent = self._entry(backend)
+            if ent[1] is None:
+                return False
+            if self.clock() - ent[1] < self.cooldown_s:
+                return True
+            if ent[2]:                  # a probe is already in flight
+                return True
+            ent[2] = True               # this caller becomes the probe
+            self._gauge(backend, 0.5)
+            return False
+
+    def record_success(self, backend: str) -> None:
+        with self._lock:
+            ent = self._entry(backend)
+            reopened = ent[1] is not None
+            ent[0] = 0
+            ent[1] = None
+            ent[2] = False
+        if reopened:
+            self._registry.counter("kernel_breaker_closes",
+                                   backend=backend).inc()
+            self._gauge(backend, 0.0)
+
+    def record_failure(self, backend: str) -> None:
+        self._registry.counter("kernel_dispatch_failures",
+                               backend=backend).inc()
+        with self._lock:
+            ent = self._entry(backend)
+            ent[0] += 1
+            tripped = ent[0] >= self.threshold or ent[2]
+            if tripped:
+                ent[1] = self.clock()   # open (or re-open after probe)
+                ent[2] = False
+        if tripped:
+            self._registry.counter("kernel_breaker_trips",
+                                   backend=backend).inc()
+            self._gauge(backend, 1.0)
+
+    def _gauge(self, backend: str, v: float) -> None:
+        self._registry.gauge("kernel_breaker_open", backend=backend).set(v)
+
+    def reset(self) -> None:
+        with self._lock:
+            self._state.clear()
+
+
+def _breaker_config() -> Tuple[int, float]:
+    return (int(os.environ.get(_BREAKER_THRESHOLD_ENV, "3")),
+            float(os.environ.get(_BREAKER_COOLDOWN_ENV, "30.0")))
+
+
+BREAKER = CircuitBreaker(*_breaker_config())
+
+
 def dispatch(name: str, *args: Any, backend: Optional[str] = None,
              tiles: Optional[Dict[str, int]] = None, **kw: Any):
     """Run kernel ``name`` on the resolved backend.
@@ -176,14 +284,44 @@ def dispatch(name: str, *args: Any, backend: Optional[str] = None,
     When ``tiles`` is None and ``REPRO_AUTOTUNE`` is set, previously-tuned
     tile sizes are looked up from the autotune cache (cache-only — dispatch
     never times; populating the cache is ``autotune.best_tiles``'s job).
+
+    Degradation: a non-dense backend that fails (or is fault-injected via
+    the ``kernel_dispatch`` scope) falls back to the dense oracle for this
+    call and feeds the circuit breaker; a quarantined backend is skipped
+    outright until its half-open probe re-admits it. Failures of the dense
+    oracle itself always propagate — there is nothing left to degrade to.
     """
     spec = get(name)
     chosen = resolve_backend(name, backend)
+    if chosen != DENSE and DENSE in spec.impls and BREAKER.quarantined(chosen):
+        from repro.obs.metrics import REGISTRY
+        REGISTRY.counter("kernel_dispatch_quarantined",
+                         backend=chosen).inc()
+        chosen = DENSE
     if tiles is None and _autotune_enabled():
         from repro.kernels import autotune
         tiles = autotune.cached_tiles(
             name, _arg_shapes(args), _arg_dtype(args), chosen)
-    return spec.impls[chosen](*args, tiles=tiles, **kw)
+    if chosen == DENSE:
+        faults.check("kernel_dispatch", kernel=name, backend=chosen)
+        return spec.impls[chosen](*args, tiles=tiles, **kw)
+    try:
+        faults.check("kernel_dispatch", kernel=name, backend=chosen)
+        out = spec.impls[chosen](*args, tiles=tiles, **kw)
+    except Exception:
+        # deliberate containment, not a swallow: the failure is counted,
+        # feeds the breaker, and execution degrades to the dense oracle
+        # for this call (FaultInjected included — that is how chaos runs
+        # drive the quarantine path)
+        BREAKER.record_failure(chosen)
+        if DENSE not in spec.impls:
+            raise
+        from repro.obs.metrics import REGISTRY
+        REGISTRY.counter("kernel_dispatch_fallbacks",
+                         backend=chosen).inc()
+        return spec.impls[DENSE](*args, tiles=None, **kw)
+    BREAKER.record_success(chosen)
+    return out
 
 
 def _autotune_enabled() -> bool:

@@ -55,6 +55,8 @@ def serve_relational(args) -> int:
         # rows as its fitting corpus
         ledger = CostLedger(args.ledger_out or None)
     snapshots = {}
+    perf = {}
+    violations = []
     for cse in (True, False):
         r = wl.run_workload(session, stream, cse=cse,
                             n_threads=args.threads,
@@ -62,22 +64,44 @@ def serve_relational(args) -> int:
                             trace_sample=args.trace_sample,
                             ledger=ledger,
                             measure_comm=args.measure_comm,
-                            refit_every=args.refit_every)
+                            refit_every=args.refit_every,
+                            deadline_s=args.deadline)
         st = r["stats"]
-        snapshots[f"cse_{'on' if cse else 'off'}"] = st
+        arm = f"cse_{'on' if cse else 'off'}"
+        snapshots[arm] = st
+        perf[arm] = {k: r[k] for k in ("queries", "wall_s", "qps",
+                                       "p50_ms", "p99_ms", "failures",
+                                       "hung", "admission_backoffs")}
         print(f"[serve] cse={'on ' if cse else 'off'} "
               f"qps={r['qps']:.0f} p50={r['p50_ms']:.2f}ms "
               f"p99={r['p99_ms']:.2f}ms root_hits={st['root_hits']} "
               f"shared_nodes={st['inter_query_cse_nodes']} "
               f"leaf_scans={st['leaf_scans']}/{st['leaf_refs']}"
-              + (f" refits={st['refits']}" if args.refit_every else ""))
+              + (f" refits={st['refits']}" if args.refit_every else "")
+              + (f" failures={r['failures']} hung={r['hung']} "
+                 f"worker_restarts={st['worker_restarts']}"
+                 if r["failures"] or r["hung"] or st["worker_crashes"]
+                 else ""))
+        # the chaos job's liveness gate (docs/robustness.md): every
+        # admitted ticket must reach a terminal state, and the counters
+        # must balance — a hung client or a lost/double-counted
+        # completion is a hard failure, faults or no faults
+        if st["completed"] + st["errors"] != st["submitted"]:
+            violations.append(
+                f"{arm}: completed({st['completed']}) + "
+                f"errors({st['errors']}) != submitted({st['submitted']})")
+        if r["hung"]:
+            violations.append(f"{arm}: {r['hung']} ticket(s) hung past "
+                              "the client timeout")
     if cost_model is not None and args.costmodel_out:
         path = cost_model.save()
         print(f"[serve] cost model v{cost_model.version} "
               f"({', '.join(cost_model.fitted_devices()) or 'unfitted'})"
               f" → {path}")
     if args.metrics_out:
-        out = {"engine": snapshots}
+        from repro.runtime import faults
+        out = {"engine": snapshots, "perf": perf,
+               "faults": faults.stats()}
         if ledger is not None:
             out["ledger"] = {"path": args.ledger_out,
                              "summary": ledger.summary()}
@@ -88,6 +112,13 @@ def serve_relational(args) -> int:
                  if args.ledger_out else ""))
     if ledger is not None:
         ledger.close()
+    if args.assert_complete:
+        if violations:
+            for v in violations:
+                print(f"[serve] COMPLETENESS VIOLATION: {v}")
+            return 1
+        print("[serve] completeness: all tickets terminal, "
+              "completed+errors == submitted in every arm")
     return 0
 
 
@@ -171,6 +202,15 @@ def main(argv=None) -> int:
     ap.add_argument("--costmodel-out", default=None,
                     help="persist fitted cost-model coefficients "
                          "(core.calibrate) to this JSON at exit")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-ticket deadline seconds (queue wait + "
+                         "execution); past it the engine finishes the "
+                         "ticket with DeadlineExceeded")
+    ap.add_argument("--assert-complete", action="store_true",
+                    help="exit 1 unless every admitted ticket reached a "
+                         "terminal state and completed+errors == "
+                         "submitted (the CI chaos gate; pair with "
+                         "REPRO_FAULTS=...)")
     # LM serving
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--smoke", action="store_true")

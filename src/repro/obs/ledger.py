@@ -33,6 +33,8 @@ import time
 from collections import deque
 from typing import Any, Dict, List, Optional
 
+from repro.runtime import faults
+
 SCHEMA = 1
 
 _PATH_ENV = "REPRO_LEDGER_PATH"
@@ -94,7 +96,11 @@ def measured_comm_bytes(plan, env, mesh) -> Optional[int]:
     from repro.plan.executor import staged_collective_bytes
     try:
         out = staged_collective_bytes(plan, env, mesh)
-    except Exception:
+    except faults.FaultInjected:
+        raise                       # injected faults are never swallowed
+    except (RuntimeError, ValueError, KeyError, OSError):
+        # un-lowerable program / missing leaf / HLO dump IO: the comm
+        # measurement is best-effort, the row records None
         out = None
     # cache the miss too (-1): un-stageable plans stay un-stageable
     plan._measured_comm_bytes = -1 if out is None else out
@@ -107,6 +113,12 @@ class CostLedger:
     ``path=None`` keeps rows in memory only (tests, ad-hoc sessions);
     with a path every row is appended as one JSON line, flushed per
     write so a crashed server loses at most the in-flight row.
+
+    Degradation contract: ledger IO failures (a full disk, a yanked
+    volume, an injected ``ledger_io`` fault) must never fail the query
+    that produced the row — the disk write is dropped and counted
+    (``dropped_writes``; the in-memory row is kept, so online refits
+    keep their corpus even while the disk is unwritable).
     """
 
     def __init__(self, path: Optional[str] = None, keep: int = 4096):
@@ -114,6 +126,7 @@ class CostLedger:
         self._rows: "deque[Dict[str, Any]]" = deque(maxlen=keep)
         self._lock = threading.Lock()
         self._fh = None
+        self.dropped_writes = 0
         if path:
             os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
             self._fh = open(path, "a")
@@ -151,8 +164,16 @@ class CostLedger:
         with self._lock:
             self._rows.append(row)
             if self._fh is not None:
-                self._fh.write(json.dumps(row) + "\n")
-                self._fh.flush()
+                try:
+                    faults.check("ledger_io")
+                    self._fh.write(json.dumps(row) + "\n")
+                    self._fh.flush()
+                except (OSError, ValueError, faults.FaultInjected):
+                    # drop-and-count (module docstring): the query must
+                    # not fail because its audit row could not persist
+                    self.dropped_writes += 1
+                    from repro.obs.metrics import REGISTRY
+                    REGISTRY.counter("ledger_dropped_writes").inc()
         return row
 
     # -- reading ---------------------------------------------------------------
@@ -193,7 +214,8 @@ class CostLedger:
                 "comm_rows": comm_rows,
                 "predicted_comm_bytes": pred_comm,
                 "measured_comm_bytes": meas_comm,
-                "comm_ratio": ratio}
+                "comm_ratio": ratio,
+                "dropped_writes": self.dropped_writes}
 
     def close(self) -> None:
         with self._lock:

@@ -46,6 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.obs.trace import TRACER, span
+from repro.runtime import faults
 
 from repro.core import joins as joinsmod
 from repro.core import joins_device as joinsdev
@@ -224,6 +225,8 @@ class PlanExecutor:
         if staged is None:
             with span("stage_compile", mode="dense",
                       spmd=mesh is not None):
+                faults.check("stage_compile", mode="dense",
+                             spmd=mesh is not None)
                 t0 = time.perf_counter()
                 staged = _stage(plan, mesh)
                 self.timings["compile_s"] += time.perf_counter() - t0
@@ -295,6 +298,8 @@ class PlanExecutor:
                 cache.pop(next(iter(cache)))
             with span("stage_compile", mode="sparse",
                       spmd=mesh is not None):
+                faults.check("stage_compile", mode="sparse",
+                             spmd=mesh is not None)
                 t0 = time.perf_counter()
                 entry = _stage_sparse(plan, mesh)
                 self.timings["compile_s"] += time.perf_counter() - t0
@@ -339,10 +344,12 @@ _FALLBACK = object()  # sentinel: staged sparse declined; run the eager oracle
 
 def _sync(x) -> None:
     """Wait for device work in ``x`` (traced runs only — see callers).
-    Host-side results (COO etc.) have nothing to wait for."""
+    Host-side results (COO etc.) have nothing to wait for; only the
+    shape errors a non-pytree payload can produce are tolerated —
+    anything else (including injected faults) propagates."""
     try:
         jax.block_until_ready(getattr(x, "value", x))
-    except Exception:
+    except (TypeError, AttributeError):
         pass
 
 

@@ -57,6 +57,26 @@ class HeartbeatMonitor:
         info.state = NodeState.HEALTHY
         info.missed = 0
 
+    def add_node(self, node_id: str) -> None:
+        """Start tracking a node mid-flight (fresh beat)."""
+        self.nodes[node_id] = NodeInfo(node_id, self.clock())
+
+    def force_fail(self, node_id: str) -> None:
+        """Mark a node as having missed every beat — used when an
+        out-of-band signal (a dead worker thread) proves the node is
+        gone without waiting ``fail_after`` wall seconds. The next
+        ``sweep`` reports it FAILED."""
+        info = self.nodes.get(node_id)
+        if info is not None:
+            info.last_beat = self.clock() - self.fail_after
+
+    def suspect(self, node_id: str) -> None:
+        """Externally mark a node SUSPECT (e.g. the straggler detector's
+        persistent-outlier hand-off) unless it is already FAILED."""
+        info = self.nodes.get(node_id)
+        if info is not None and info.state is not NodeState.FAILED:
+            info.state = NodeState.SUSPECT
+
     def sweep(self) -> List[str]:
         """Returns newly-failed node ids."""
         now = self.clock()

@@ -33,8 +33,24 @@ class StragglerDetector:
             h: deque(maxlen=window) for h in hosts}
         self.strikes: Dict[str, int] = {h: 0 for h in hosts}
 
+    def add_host(self, host: str) -> None:
+        """Track a new host (e.g. a replacement serving worker spawned
+        by the restart policy) from a cold window."""
+        if host not in self.times:
+            self.hosts.append(host)
+            self.times[host] = deque(maxlen=self.window)
+            self.strikes[host] = 0
+
+    def drop_host(self, host: str) -> None:
+        """Stop tracking a retired host."""
+        if host in self.times:
+            self.hosts.remove(host)
+            del self.times[host]
+            del self.strikes[host]
+
     def record(self, host: str, step_time: float) -> None:
-        self.times[host].append(step_time)
+        if host in self.times:      # retired hosts may still report once
+            self.times[host].append(step_time)
 
     def detect(self) -> StragglerReport:
         means = {h: (np.mean(t) if t else 0.0)

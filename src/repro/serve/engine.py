@@ -53,6 +53,11 @@ from repro.obs.trace import TRACER
 from repro.plan import builder as buildermod
 from repro.plan.executor import PlanExecutor
 from repro.plan import ops as P
+from repro.runtime import faults
+from repro.runtime.fault_tolerance import (
+    FaultCoordinator, HeartbeatMonitor, NodeState,
+)
+from repro.runtime.straggler import StragglerDetector
 
 
 class AdmissionError(RuntimeError):
@@ -60,20 +65,37 @@ class AdmissionError(RuntimeError):
     budget). Clients are expected to back off and retry."""
 
 
+class DeadlineExceeded(TimeoutError):
+    """A ticket blew its ``deadline_s`` budget at a cooperative
+    cancellation checkpoint (plan / prewarm / execute boundaries). The
+    query is finished with this error instead of burning more engine
+    time on a result the client has stopped waiting for."""
+
+
+_UNSET = object()
+
+
 class Ticket:
     """Async handle for one submitted query."""
 
-    def __init__(self, query: Expr, tenant: str):
+    def __init__(self, query: Expr, tenant: str,
+                 deadline_s: Optional[float] = None,
+                 default_timeout: Optional[float] = None):
         self.query = query
         self.tenant = tenant
         self.submitted_at = time.perf_counter()
+        self.deadline_s = deadline_s
+        self.deadline = (None if deadline_s is None
+                         else self.submitted_at + deadline_s)
         self.started_at: Optional[float] = None
         self.finished_at: Optional[float] = None
         self.reused_nodes = 0        # node results served from the shared LRU
         self.evaluated_nodes = 0
         self.trace = None            # obs.trace.Trace when sampled at submit
         self.opt = None              # OptimizeResult (predicted nnz → ledger)
+        self._default_timeout = default_timeout
         self._done = threading.Event()
+        self._finish_guard = threading.Lock()
         self._result = None
         self._error: Optional[BaseException] = None
 
@@ -82,18 +104,34 @@ class Ticket:
         return self.trace.trace_id if self.trace is not None else None
 
     # -- worker side ----------------------------------------------------------
-    def _finish(self, result=None, error: Optional[BaseException] = None):
-        self._result, self._error = result, error
-        self.finished_at = time.perf_counter()
-        self._done.set()
+    def _finish(self, result=None,
+                error: Optional[BaseException] = None) -> bool:
+        """Record the outcome exactly once. Returns False when the
+        ticket was already finished — crash containment means several
+        layers (per-ticket, batch-level, worker-exit, supervisor) may
+        legitimately race to finish the same ticket, and only the first
+        may count."""
+        with self._finish_guard:
+            if self._done.is_set():
+                return False
+            self._result, self._error = result, error
+            self.finished_at = time.perf_counter()
+            self._done.set()
+            return True
 
     # -- client side ----------------------------------------------------------
     def done(self) -> bool:
         return self._done.is_set()
 
-    def result(self, timeout: Optional[float] = None):
-        if not self._done.wait(timeout):
-            raise TimeoutError("query still in flight")
+    def result(self, timeout=_UNSET):
+        """Wait for the outcome. With no ``timeout`` argument the
+        engine's ``default_timeout_s`` applies (pass ``timeout=None``
+        explicitly to wait forever)."""
+        t = self._default_timeout if timeout is _UNSET else timeout
+        if not self._done.wait(t):
+            raise TimeoutError(
+                f"query still in flight after {t}s "
+                f"(tenant={self.tenant!r}, trace_id={self.trace_id})")
         if self._error is not None:
             raise self._error
         return self._result
@@ -167,7 +205,16 @@ class ServeEngine:
         "inter_query_cse_nodes",
         "leaf_scans", "leaf_refs", "batches",
         "refits", "refit_rows",
+        # robustness tier (PR 9): every degradation is counted
+        "worker_crashes", "worker_restarts", "batch_failures",
+        "prewarm_failures", "deadline_exceeded",
+        "exec_retries", "degraded_eager",
+        "ledger_errors", "refit_crashes", "stragglers_suspected",
     )
+
+    # errors the staged-execution retry loop must NOT retry: they are
+    # deterministic (config / cancellation), not transient
+    _NON_RETRYABLE = (DeadlineExceeded, AdmissionError, TypeError, KeyError)
 
     def __init__(self, session, *, n_threads: int = 2, max_queue: int = 1024,
                  tenant_max_inflight: Optional[int] = None, cse: bool = True,
@@ -179,7 +226,12 @@ class ServeEngine:
                  trace_sample: Optional[float] = None,
                  ledger=None, ledger_root_hits: bool = False,
                  measure_comm: bool = False,
-                 refit_every: Optional[int] = None):
+                 refit_every: Optional[int] = None,
+                 default_timeout_s: Optional[float] = 300.0,
+                 deadline_s: Optional[float] = None,
+                 exec_retries: int = 2, retry_backoff_s: float = 0.005,
+                 suspect_after_s: float = 10.0, fail_after_s: float = 30.0,
+                 supervise_every_s: float = 0.5):
         self.session = session
         self.cse = cse
         self.max_queue = max_queue
@@ -240,20 +292,54 @@ class ServeEngine:
         self._lock = threading.Lock()
         self._work = threading.Condition(self._lock)
         self._stop = False
-        self._threads = [
-            threading.Thread(target=self._worker_loop, daemon=True,
-                             name=f"serve-worker-{i}")
-            for i in range(n_threads)]
-        for t in self._threads:
+        # degradation policy knobs (see docs/robustness.md)
+        self.default_timeout_s = default_timeout_s
+        self.deadline_s = deadline_s
+        self.exec_retries = exec_retries
+        self.retry_backoff_s = retry_backoff_s
+        # worker supervision: every worker is a node in the seed
+        # HeartbeatMonitor / FaultCoordinator (runtime.fault_tolerance);
+        # workers beat per batch and per ticket, a dead thread is
+        # force-failed immediately, and the coordinator's replace policy
+        # names the replacement worker the supervisor spawns. The
+        # straggler detector is fed per-ticket worker wall times and
+        # hands persistent outliers to the monitor as SUSPECT.
+        self._ft_lock = threading.Lock()
+        worker_ids = [f"w{i}" for i in range(n_threads)]
+        self._monitor = HeartbeatMonitor(
+            worker_ids, suspect_after=suspect_after_s,
+            fail_after=fail_after_s)
+        self._coord = FaultCoordinator(self._monitor, reserves=[],
+                                       min_world=1)
+        self._straggler = StragglerDetector(list(worker_ids), window=16)
+        self._next_worker = n_threads
+        self._heartbeat_s = min(0.2, supervise_every_s)
+        self._worker_batches: Dict[str, List[Ticket]] = {}
+        self._workers: Dict[str, threading.Thread] = {}
+        for wid in worker_ids:
+            t = threading.Thread(target=self._worker_loop, args=(wid,),
+                                 daemon=True, name=f"serve-worker-{wid}")
+            self._workers[wid] = t
             t.start()
+        self._supervisor_stop = threading.Event()
+        self._supervisor = threading.Thread(
+            target=self._supervise_loop, args=(supervise_every_s,),
+            daemon=True, name="serve-supervisor")
+        self._supervisor.start()
 
     # -- lifecycle ------------------------------------------------------------
     def close(self) -> None:
         with self._lock:
             self._stop = True
             self._work.notify_all()
-        for t in self._threads:
-            t.join()
+        self._supervisor_stop.set()
+        self._supervisor.join(timeout=10.0)
+        with self._lock:
+            threads = list(self._workers.values())
+        for t in threads:
+            # a genuinely hung worker cannot be joined — bounded wait so
+            # close() never inherits the hang it exists to contain
+            t.join(timeout=10.0)
 
     def __enter__(self) -> "ServeEngine":
         return self
@@ -262,14 +348,20 @@ class ServeEngine:
         self.close()
 
     # -- client API -----------------------------------------------------------
-    def submit(self, query, tenant: str = "default") -> Ticket:
+    def submit(self, query, tenant: str = "default",
+               deadline_s: Optional[float] = None) -> Ticket:
         """Enqueue one logical plan (an ``Expr`` or a ``core.api.Matrix``);
         raises ``AdmissionError`` when the queue or the tenant budget is
-        full."""
+        full. ``deadline_s`` (default: the engine's ``deadline_s``)
+        bounds queue wait + execution: past it, the next cooperative
+        checkpoint finishes the ticket with ``DeadlineExceeded``."""
         expr = query.plan if hasattr(query, "plan") else query
         if not isinstance(expr, Expr):
             raise TypeError(f"not a logical plan: {type(query)}")
-        ticket = Ticket(expr, tenant)
+        ticket = Ticket(
+            expr, tenant,
+            deadline_s=self.deadline_s if deadline_s is None else deadline_s,
+            default_timeout=self.default_timeout_s)
         with self._lock:
             if self._stop:
                 raise RuntimeError("engine is closed")
@@ -310,10 +402,11 @@ class ServeEngine:
         self._trace_seq += 1
         return self._trace_seq % period == 0
 
-    def run(self, query, tenant: str = "default",
-            timeout: Optional[float] = None):
+    def run(self, query, tenant: str = "default", timeout=_UNSET,
+            deadline_s: Optional[float] = None):
         """Submit and wait (the synchronous convenience path)."""
-        return self.submit(query, tenant=tenant).result(timeout)
+        return self.submit(query, tenant=tenant,
+                           deadline_s=deadline_s).result(timeout)
 
     def drain(self, timeout: float = 60.0) -> None:
         """Block until every submitted ticket has finished."""
@@ -368,34 +461,107 @@ class ServeEngine:
     def _finish_ticket(self, ticket: Ticket, result=None,
                        error: Optional[BaseException] = None) -> None:
         """The single completion site: every ticket — success, plan
-        failure or execution failure — ends here exactly once, so
-        ``completed``/``errors`` and the latency histogram can never
-        drift from the ticket stream (previously three call sites
-        incremented independently)."""
-        ticket._finish(result=result, error=error)
+        failure, execution failure, deadline, worker crash — ends here
+        EXACTLY once (``Ticket._finish`` is first-wins), so
+        ``completed``/``errors``, the latency histogram and the
+        per-tenant in-flight accounting can never drift from the ticket
+        stream even when crash containment races normal completion."""
+        if not ticket._finish(result=result, error=error):
+            return
         self._counters["errors" if error is not None
                        else "completed"].inc()
+        if isinstance(error, DeadlineExceeded):
+            self._counters["deadline_exceeded"].inc()
         self._latency.observe(ticket.latency)
+        with self._lock:
+            n = self._inflight.get(ticket.tenant, 0) - 1
+            if n > 0:
+                self._inflight[ticket.tenant] = n
+            else:
+                self._inflight.pop(ticket.tenant, None)
         if ticket.trace is not None:
             ticket.trace.finish()
 
-    def _worker_loop(self) -> None:
-        while True:
-            with self._lock:
-                while not self._queue and not self._stop:
-                    self._work.wait()
-                if self._stop and not self._queue:
+    def _check_deadline(self, ticket: Ticket, phase: str) -> None:
+        """Cooperative cancellation checkpoint (plan / prewarm / execute
+        boundaries)."""
+        if (ticket.deadline is not None
+                and time.perf_counter() > ticket.deadline):
+            raise DeadlineExceeded(
+                f"deadline of {ticket.deadline_s}s exceeded at {phase!r} "
+                f"(tenant={ticket.tenant!r}, trace_id={ticket.trace_id})")
+
+    def _beat(self, wid: str) -> bool:
+        """Heartbeat ``wid`` into the monitor; False when the restart
+        policy has retired this worker (it must exit its loop)."""
+        with self._ft_lock:
+            if wid not in self._monitor.nodes:
+                return False
+            self._monitor.beat(wid)
+        return True
+
+    def _worker_loop(self, wid: str) -> None:
+        """One worker thread: drain batches until stopped, retired, or
+        killed. ANY abnormal exit flows through ``_worker_exit``, which
+        finishes the in-flight batch with the error and hands the crash
+        to the coordinator-driven restart policy — a worker death can
+        strand neither its tickets nor its queue slot."""
+        err: Optional[BaseException] = None
+        try:
+            while True:
+                batch = self._next_batch(wid)
+                if batch is None:
                     return
-                batch: List[Ticket] = []
-                while self._queue and len(batch) < self.batch_max:
-                    batch.append(self._queue.popleft())
-                self._counters["batches"].inc()
+                if batch:
+                    self._process_batch(wid, batch)
+        except BaseException as e:
+            err = e
+        finally:
+            self._worker_exit(wid, err)
+
+    def _next_batch(self, wid: str) -> Optional[List[Ticket]]:
+        """One drain attempt: ``None`` → exit (stop/retired), ``[]`` →
+        idle wakeup (beat again, re-check). Idle waits are bounded by
+        the heartbeat interval so a quiet worker still beats."""
+        if not self._beat(wid):
+            return None
+        with self._lock:
+            if self._stop and not self._queue:
+                return None
+            if not self._queue:
+                self._work.wait(timeout=self._heartbeat_s)
+                return []
+            batch: List[Ticket] = []
+            while self._queue and len(batch) < self.batch_max:
+                batch.append(self._queue.popleft())
+            self._counters["batches"].inc()
+            self._worker_batches[wid] = batch
+        return batch
+
+    def _process_batch(self, wid: str, batch: List[Ticket]) -> None:
+        """Plan, prewarm and execute one batch. Failure containment, in
+        order of blast radius: per-ticket failures finish that ticket;
+        prewarm failures degrade the batch to un-prewarmed execution;
+        batch-level failures (version snapshot, bookkeeping) finish
+        every ticket in the batch with the error — the regression this
+        pins is an exception between dequeue and the per-ticket loop
+        stranding a whole batch of clients in ``result()``. Worker-kill
+        faults (``BaseException``) pass through to ``_worker_exit``."""
+        t_batch0 = time.perf_counter()
+        try:
+            faults.check("worker", worker=wid)
             state = self._current_state()
             lowered = [self._plan_ticket(state, t) for t in batch]
             if self.cse:
                 t0 = time.perf_counter()
-                self._prewarm_leaves(state, [p for p in lowered
-                                             if p is not None])
+                try:
+                    faults.check("prewarm", worker=wid)
+                    self._prewarm_leaves(state, [p for p in lowered
+                                                 if p is not None])
+                except Exception:
+                    # contained per-batch: leaves will materialize
+                    # per-query through the result cache instead
+                    self._counters["prewarm_failures"].inc()
                 t1 = time.perf_counter()
                 # batch-level phase, attributed to every traced ticket
                 for ticket in batch:
@@ -404,15 +570,110 @@ class ServeEngine:
                             TRACER.add_event("batch_prewarm", t0, t1,
                                              batch=len(batch))
             for ticket, lw in zip(batch, lowered):
+                if lw is None:
+                    continue        # already finished in _plan_ticket
+                self._beat(wid)     # long batches must not look hung
                 try:
-                    if lw is not None:
-                        with TRACER.activate(ticket.trace):
-                            self._execute(state, ticket, lw)
-                except BaseException as e:      # propagate to the client
+                    self._check_deadline(ticket, "execute")
+                    with TRACER.activate(ticket.trace):
+                        self._execute(state, ticket, lw)
+                except Exception as e:  # propagate to the client
                     self._finish_ticket(ticket, error=e)
-                finally:
-                    with self._lock:
-                        self._inflight[ticket.tenant] -= 1
+        except BaseException as e:
+            if not isinstance(e, Exception):
+                raise               # worker-killing: _worker_exit cleans up
+            self._counters["batch_failures"].inc()
+            for t in batch:
+                self._finish_ticket(t, error=e)
+        self._worker_batches.pop(wid, None)
+        with self._ft_lock:
+            self._straggler.record(
+                wid, (time.perf_counter() - t_batch0) / len(batch))
+
+    def _worker_exit(self, wid: str, err: Optional[BaseException]) -> None:
+        """Last act of a worker thread (normal exit, retirement, or
+        death): finish any batch it still held, then — for a crash —
+        report the node failed and run the restart policy inline so
+        recovery does not wait for the next supervisor sweep."""
+        batch = self._worker_batches.pop(wid, None)
+        if batch:
+            e = (err if isinstance(err, Exception)
+                 else RuntimeError(f"serve worker {wid} died: {err!r}"))
+            for t in batch:
+                self._finish_ticket(t, error=e)
+        if err is None or self._stop:
+            return
+        self._counters["worker_crashes"].inc()
+        with self._ft_lock:
+            self._monitor.force_fail(wid)
+        self._supervise_once()
+
+    # -- supervision ----------------------------------------------------------
+    def _supervise_loop(self, every_s: float) -> None:
+        while not self._supervisor_stop.wait(every_s):
+            try:
+                self._supervise_once()
+            except Exception:       # supervision must outlive its bugs
+                self.metrics.counter("serve_supervisor_errors").inc()
+
+    def _supervise_once(self) -> None:
+        """One sweep of the restart policy: force-fail dead threads,
+        SUSPECT/FAILED transitions from heartbeats, straggler hand-off,
+        and coordinator-planned replacement of FAILED workers."""
+        to_spawn: List[tuple] = []
+        with self._ft_lock:
+            for wid, th in list(self._workers.items()):
+                # a dead thread cannot beat again: fail it immediately
+                # rather than waiting out the fail_after window
+                if not th.is_alive() and wid in self._monitor.nodes:
+                    self._monitor.force_fail(wid)
+            self._monitor.sweep()
+            failed = [n for n, i in self._monitor.nodes.items()
+                      if i.state is NodeState.FAILED]
+            if failed:
+                # top up the reserve pool so the policy always replaces
+                # (a serving engine shrinks only when told to)
+                while len(self._coord.reserves) < len(failed):
+                    self._coord.reserves.append(f"w{self._next_worker}")
+                    self._next_worker += 1
+                plan = self._coord.plan()
+                if plan.action == "replace":
+                    for old, new in zip(plan.failed, plan.replacements):
+                        self._straggler.drop_host(old)
+                        self._straggler.add_host(new)
+                        to_spawn.append((old, new))
+            else:
+                # persistent latency outliers become SUSPECT: a later
+                # hard failure is pre-diagnosed, and the transition is
+                # visible in the snapshot before anything breaks
+                rep = self._straggler.detect()
+                for slow in rep.slow_hosts:
+                    info = self._monitor.nodes.get(slow)
+                    if info is not None and \
+                            info.state is NodeState.HEALTHY:
+                        self._monitor.suspect(slow)
+                        self._counters["stragglers_suspected"].inc()
+        for old, new in to_spawn:
+            # a hung (not dead) worker may still hold a batch; its
+            # clients get an error now instead of a silent hang. If the
+            # hung thread later resumes, every completion path is
+            # idempotent and its next beat tells it to exit.
+            batch = self._worker_batches.pop(old, None)
+            if batch:
+                e = RuntimeError(
+                    f"serve worker {old} removed by restart policy")
+                for t in batch:
+                    self._finish_ticket(t, error=e)
+            with self._lock:
+                if self._stop:
+                    continue
+                th = threading.Thread(
+                    target=self._worker_loop, args=(new,),
+                    daemon=True, name=f"serve-worker-{new}")
+                self._workers.pop(old, None)
+                self._workers[new] = th
+                th.start()
+            self._counters["worker_restarts"].inc()
 
     def _plan_ticket(self, state: _VersionState, ticket: Ticket
                      ) -> Optional[buildermod.SharedLowering]:
@@ -424,6 +685,7 @@ class ServeEngine:
             ticket.started_at = time.perf_counter()
             self._queue_wait.observe(ticket.started_at
                                      - ticket.submitted_at)
+            self._check_deadline(ticket, "plan")
             with TRACER.activate(ticket.trace):
                 TRACER.add_event("queue_wait", ticket.submitted_at,
                                  ticket.started_at)
@@ -456,8 +718,8 @@ class ServeEngine:
                     return lw
                 return state.plans.get_or_create(opt.plan, _lower,
                                                  tenant=ticket.tenant)
-        except BaseException as e:
-            self._finish_ticket(ticket, error=e)
+        except Exception as e:      # kills (BaseException) escape to
+            self._finish_ticket(ticket, error=e)      # _worker_exit
             return None
 
     def _prewarm_leaves(self, state: _VersionState,
@@ -570,24 +832,32 @@ class ServeEngine:
                     overflow: bool = False) -> None:
         if self.ledger is None:
             return
-        measured_comm = None
-        if self.measure_comm:
-            if self.session.mesh is not None:
-                from repro.obs.ledger import measured_comm_bytes
-                measured_comm = measured_comm_bytes(plan, state.env,
-                                                    self.session.mesh)
-            else:
-                # single device: no interconnect, so the measured
-                # collective traffic is exactly zero — recording it keeps
-                # the predicted/measured comm gate meaningful off-mesh
-                # (predicted must also be 0 for the ratio to stay 1.0)
-                measured_comm = 0
-        self.ledger.record(
-            query=signature(ticket.query), plan=plan,
-            exec_path=exec_path, wall_s=wall_s, compile_s=compile_s,
-            measured_comm=measured_comm, overflow=overflow,
-            opt=ticket.opt, trace_id=ticket.trace_id,
-            tenant=ticket.tenant)
+        try:
+            measured_comm = None
+            if self.measure_comm:
+                if self.session.mesh is not None:
+                    from repro.obs.ledger import measured_comm_bytes
+                    measured_comm = measured_comm_bytes(plan, state.env,
+                                                        self.session.mesh)
+                else:
+                    # single device: no interconnect, so the measured
+                    # collective traffic is exactly zero — recording it
+                    # keeps the predicted/measured comm gate meaningful
+                    # off-mesh (predicted must also be 0 for ratio 1.0)
+                    measured_comm = 0
+            self.ledger.record(
+                query=signature(ticket.query), plan=plan,
+                exec_path=exec_path, wall_s=wall_s, compile_s=compile_s,
+                measured_comm=measured_comm, overflow=overflow,
+                opt=ticket.opt, trace_id=ticket.trace_id,
+                tenant=ticket.tenant)
+        except Exception:
+            # isolation contract: the audit row is subordinate to the
+            # query — a ledger failure (including an injected
+            # ``ledger_io`` fault that escaped drop-and-count, or a
+            # comm-measurement crash) is counted, never propagated
+            self._counters["ledger_errors"].inc()
+            return
         if exec_path != "root_hit":
             self._maybe_refit()
 
@@ -633,9 +903,18 @@ class ServeEngine:
         model = self.session.cost_model
         v0 = model.version
         try:
+            faults.check("refit")
             ok = model.fit_from_rows(rows)
         except Exception:
-            ok = False
+            # a crashed refit thread must not take online calibration
+            # down with it: count the crash and leave the trigger armed —
+            # ``_maybe_refit`` sees the dead thread and relaunches at the
+            # next interval
+            self._counters["refit_crashes"].inc()
+            with self._refit_lock:
+                self._refit_last_at = (self._refit_rows_seen
+                                       - self._refit_interval)
+            return
         if not ok:
             return
         self._counters["refits"].inc()
@@ -656,14 +935,40 @@ class ServeEngine:
 
     def _run_staged(self, state: _VersionState,
                     lw: buildermod.SharedLowering):
-        """Standalone (jit-staged when possible) execution of one plan.
+        """Standalone (jit-staged when possible) execution of one plan,
+        hardened with the degradation ladder (docs/robustness.md):
+        transient staged-path failures (a flaky staged compile, an
+        injected ``execute`` fault) are retried with exponential backoff
+        up to ``exec_retries`` times, then execution falls down to the
+        per-node eager path (``stage_jit=False``) — semantically
+        identical, slower, and immune to staging failures. Deterministic
+        errors (``_NON_RETRYABLE``) propagate immediately.
+
         The staged compile caches live on the shared ``PhysicalPlan``, so
         execution is serialized per plan object across worker threads."""
-        ex = PlanExecutor(state.env, mesh=self.session.mesh,
-                          metrics=self.metrics)
         with self._lock:
             lock = state.plan_locks.setdefault(id(lw.plan),
                                                threading.Lock())
+        for attempt in range(self.exec_retries + 1):
+            ex = PlanExecutor(state.env, mesh=self.session.mesh,
+                              metrics=self.metrics)
+            try:
+                with lock:
+                    faults.check("execute", attempt=attempt)
+                    out = ex.run(lw.plan)
+                return out, ex
+            except self._NON_RETRYABLE:
+                raise
+            except Exception:
+                if attempt == self.exec_retries:
+                    break           # ladder: degrade instead of raising
+                self._counters["exec_retries"].inc()
+                time.sleep(self.retry_backoff_s * (2 ** attempt))
+        # bottom of the ladder: per-node eager execution never touches
+        # the staged-compile seam; a failure here is genuine and
+        # propagates to the client through per-ticket containment
+        self._counters["degraded_eager"].inc()
+        ex = PlanExecutor(state.env, stage_jit=False, metrics=self.metrics)
         with lock:
             out = ex.run(lw.plan)
         return out, ex

@@ -99,16 +99,28 @@ def run_workload(session: Session,
     and no-CSE configurations (it warms the staged compile caches of
     both; for CSE it additionally seeds the shared result cache, which is
     precisely the steady state being measured).
+
+    Chaos tolerance: under an active fault schedule (``runtime.faults``)
+    some tickets legitimately finish with an error — those are *terminal*
+    outcomes, counted in ``failures``, and the workload keeps going. A
+    ticket that never finishes at all (the failure mode the robustness
+    tier exists to prevent) is counted in ``hung`` — a chaos gate asserts
+    that stays zero.
     """
-    from repro.serve.engine import AdmissionError, ServeEngine
+    from repro.serve.engine import (
+        AdmissionError, DeadlineExceeded, ServeEngine,
+    )
 
     tickets = []
-    rejected = 0
+    rejected = failures = hung = 0
     with ServeEngine(session, cse=cse, **engine_kw) as eng:
         if warmup:
             distinct = {name: expr for _t, name, expr in stream}
             for expr in distinct.values():
-                eng.run(expr, timeout=300.0)
+                try:
+                    eng.run(expr, timeout=300.0)
+                except Exception:
+                    pass        # a faulted warmup must not abort the run
         t0 = time.perf_counter()
         for tenant, _name, expr in stream:
             while True:
@@ -119,7 +131,14 @@ def run_workload(session: Session,
                     rejected += 1       # back off and retry, like a client
                     time.sleep(0.0005)
         for t in tickets:
-            t.result(timeout=300.0)
+            try:
+                t.result(timeout=300.0)
+            except DeadlineExceeded:
+                failures += 1           # terminal: the engine cancelled it
+            except TimeoutError:
+                hung += 1               # NOT terminal: the client gave up
+            except Exception:
+                failures += 1           # terminal: finished with an error
         wall = time.perf_counter() - t0
         snap = eng.snapshot()
     lat_ms = sorted(t.latency * 1e3 for t in tickets)
@@ -132,5 +151,7 @@ def run_workload(session: Session,
         "p50_ms": pct(0.50),
         "p99_ms": pct(0.99),
         "admission_backoffs": rejected,
+        "failures": failures,
+        "hung": hung,
         "stats": snap,
     }

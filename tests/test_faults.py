@@ -1,0 +1,166 @@
+"""Fault-injection subsystem tests: DSL parsing, schedules, activation.
+
+The chaos suites (``test_chaos_serve.py``) only prove anything if the
+fault driver itself is deterministic and correct — these tests pin the
+DSL semantics (p / every / after / times / seed / match filters / kind)
+and the activation precedence (installed plan > ``REPRO_FAULTS`` env,
+re-parsed only when the text changes).
+"""
+import pytest
+
+from repro.runtime import faults
+from repro.runtime.faults import (
+    FaultInjected, WorkerKilled, parse,
+)
+
+
+@pytest.fixture(autouse=True)
+def _clean_activation(monkeypatch):
+    monkeypatch.delenv(faults.ENV, raising=False)
+    faults.uninstall()
+    yield
+    faults.uninstall()
+
+
+def _fires(plan, scope, n, **attrs):
+    """Drive ``n`` calls against ``plan``; return the fire pattern."""
+    out = []
+    for _ in range(n):
+        try:
+            plan.check(scope, attrs)
+            out.append(False)
+        except (FaultInjected, WorkerKilled):
+            out.append(True)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# parsing
+
+
+def test_parse_rejects_unknown_scope():
+    with pytest.raises(ValueError, match="unknown fault scope"):
+        parse("not_a_seam:p=0.5")
+
+
+def test_parse_rejects_malformed_item():
+    with pytest.raises(ValueError, match="malformed fault item"):
+        parse("prewarm:banana")
+
+
+def test_parse_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        parse("worker:kind=maim")
+
+
+def test_parse_multi_spec_and_filters():
+    plan = parse("stage_compile:p=0.3,seed=7;"
+                 "kernel_dispatch:backend=pallas-tpu,every=5")
+    assert len(plan.specs) == 2
+    kd = plan.specs[1]
+    assert kd.scope == "kernel_dispatch"
+    assert kd.every == 5
+    assert kd.match == {"backend": "pallas-tpu"}
+
+
+def test_empty_segments_ignored():
+    assert parse(";;  ;").specs == []
+
+
+# ---------------------------------------------------------------------------
+# schedules
+
+
+def test_default_spec_always_fires():
+    assert _fires(parse("ledger_io"), "ledger_io", 4) == [True] * 4
+
+
+def test_every_schedule_is_exact():
+    plan = parse("prewarm:every=3")
+    assert _fires(plan, "prewarm", 9) == [
+        False, False, True, False, False, True, False, False, True]
+
+
+def test_after_skips_warmup_calls():
+    plan = parse("execute:after=2")
+    assert _fires(plan, "execute", 5) == [False, False, True, True, True]
+
+
+def test_times_caps_total_fires():
+    plan = parse("worker:times=2")
+    assert _fires(plan, "worker", 5) == [True, True, False, False, False]
+    assert plan.stats()["worker"] == {"calls": 5, "fires": 2}
+
+
+def test_p_schedule_is_seed_deterministic():
+    a = _fires(parse("execute:p=0.4,seed=11"), "execute", 64)
+    b = _fires(parse("execute:p=0.4,seed=11"), "execute", 64)
+    c = _fires(parse("execute:p=0.4,seed=12"), "execute", 64)
+    assert a == b                    # replayable
+    assert a != c                    # seed actually matters
+    assert 0 < sum(a) < 64           # neither never nor always
+
+
+def test_p_zero_never_fires():
+    # the bench's "armed but silent" arm: guard overhead measurement
+    assert sum(_fires(parse("execute:p=0.0"), "execute", 100)) == 0
+
+
+def test_match_filter_gates_by_attr():
+    plan = parse("kernel_dispatch:backend=pallas-tpu")
+    assert _fires(plan, "kernel_dispatch", 2, backend="dense") \
+        == [False, False]
+    assert _fires(plan, "kernel_dispatch", 2, backend="pallas-tpu") \
+        == [True, True]
+    # filtered-out calls do not advance the schedule
+    assert plan.stats()["kernel_dispatch"]["calls"] == 2
+
+
+def test_kill_kind_is_base_exception():
+    plan = parse("worker:kind=kill")
+    with pytest.raises(WorkerKilled):
+        plan.check("worker", {})
+    # the whole point: batch containment's `except Exception` misses it
+    assert not issubclass(WorkerKilled, Exception)
+    assert issubclass(FaultInjected, RuntimeError)
+
+
+def test_fault_message_carries_scope_and_attrs():
+    with pytest.raises(FaultInjected, match="stage_compile.*mode=dense"):
+        parse("stage_compile").check("stage_compile", {"mode": "dense"})
+
+
+# ---------------------------------------------------------------------------
+# activation
+
+
+def test_inject_context_installs_and_uninstalls():
+    assert faults.active() is None
+    with faults.inject("prewarm") as plan:
+        assert faults.active() is plan
+        with pytest.raises(FaultInjected):
+            faults.check("prewarm")
+    assert faults.active() is None
+    faults.check("prewarm")          # no-op once uninstalled
+
+
+def test_env_activation_and_text_change_reparse(monkeypatch):
+    monkeypatch.setenv(faults.ENV, "ledger_io:every=2")
+    p1 = faults.active()
+    assert p1 is not None and faults.active() is p1   # cached
+    monkeypatch.setenv(faults.ENV, "ledger_io:every=3")
+    p2 = faults.active()
+    assert p2 is not p1              # text change → re-parse
+    assert p2.specs[0].every == 3
+
+
+def test_installed_plan_overrides_env(monkeypatch):
+    monkeypatch.setenv(faults.ENV, "ledger_io")
+    with faults.inject("prewarm"):
+        faults.check("ledger_io")    # env plan masked by installed one
+        with pytest.raises(FaultInjected):
+            faults.check("prewarm")
+
+
+def test_stats_empty_without_plan():
+    assert faults.stats() == {}
