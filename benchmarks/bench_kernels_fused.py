@@ -1,0 +1,193 @@
+"""Fused kernel tier benchmark: SDDMM+agg vs materialize-then-aggregate,
+plus the fleet autotune warm-start proof.
+
+Three claims, all committed to ``BENCH_kernels.json`` and gated by
+``benchmarks/check_kernels.py``:
+
+* **wall**: Σ_row(A ∘ (W×H)) through the fused ``sddmm_agg`` kernel beats
+  the unfused ``sum(sp * (w @ h))`` formulation by ≥1.3× paired wall time
+  on at least one shape — with k ≪ n the fused form replaces the m×n
+  product (and two more m×n-sized passes over it) with an m×k panel;
+* **memory**: the fused program's largest intermediate is m×k, not m×n —
+  measured from XLA's compiled memory analysis where the backend reports
+  it, else from the optimized HLO's largest non-parameter result shape;
+* **warm start**: a second autotune pass over the same buckets performs
+  zero timing trials — the artifact written by the first pass (the file
+  CI caches across runs) serves every lookup from cache.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import paired, row, sparse
+from repro.kernels import autotune, registry
+from repro.kernels.sddmm_agg import sddmm_agg_ref
+
+# (m, k, n): k ≪ n is the PNMF regime the fused kernel targets
+SHAPES = [(1024, 8, 1024), (2048, 4, 2048), (2048, 8, 2048)]
+DENSITY = 0.05
+
+_DTYPE_BYTES = {"f16": 2, "bf16": 2, "f32": 4, "f64": 8}
+_HLO_RESULT = re.compile(r"=\s+(f16|bf16|f32|f64)\[([\d,]*)\]")
+
+
+def _peak_intermediate_bytes(fn, *args):
+    """Largest temp the compiled program allocates, in bytes.
+
+    Prefers the backend's buffer-assignment numbers
+    (``compiled.memory_analysis()``); falls back to scanning the
+    optimized HLO for the biggest non-parameter op result — a shape-level
+    proof that no m×n product is ever materialized."""
+    comp = jax.jit(fn).lower(*args).compile()
+    try:
+        ma = comp.memory_analysis()
+        temp = int(getattr(ma, "temp_size_in_bytes", 0) or 0)
+        if temp > 0:
+            return temp, "memory_analysis"
+    except Exception:
+        pass
+    best = 0
+    for line in comp.as_text().splitlines():
+        if "parameter(" in line:
+            continue
+        m = _HLO_RESULT.search(line)
+        if not m:
+            continue
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        best = max(best, int(np.prod(dims or [1]))
+                   * _DTYPE_BYTES[m.group(1)])
+    return best, "hlo_text"
+
+
+def _bench_sddmm(rng) -> None:
+    for m, k, n in SHAPES:
+        sp = jnp.asarray(sparse(rng, m, n, DENSITY))
+        w = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+        h = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+
+        fused = jax.jit(lambda s, a, b: sddmm_agg_ref(s, a, b, "row"))
+        unfused = jax.jit(
+            lambda s, a, b: jnp.sum(s * jnp.dot(a, b), axis=1,
+                                    keepdims=True))
+        # same math to float tolerance before timing anything
+        np.testing.assert_allclose(np.asarray(fused(sp, w, h)),
+                                   np.asarray(unfused(sp, w, h)),
+                                   atol=1e-2, rtol=1e-4)
+        tf, tu = paired(lambda: fused(sp, w, h),
+                        lambda: unfused(sp, w, h), repeats=7, warmup=2)
+        pf, how_f = _peak_intermediate_bytes(fused, sp, w, h)
+        pu, how_u = _peak_intermediate_bytes(unfused, sp, w, h)
+        row(f"kernels_sddmm_{m}x{k}x{n}_fused", tf * 1e6,
+            f"speedup={tu / max(tf, 1e-12):.2f}x "
+            f"peak_fused={pf} peak_unfused={pu} mem_src={how_f}/{how_u}")
+        row(f"kernels_sddmm_{m}x{k}x{n}_unfused", tu * 1e6,
+            "materialize m×n then aggregate")
+
+
+def _bench_coo_expand(rng) -> None:
+    """Informational on CPU (the dense oracle IS the historical unfused
+    path and the Pallas body pays the interpreter tax here): pins the
+    wall cost of one fused expansion per cap so accelerator runs have a
+    committed baseline to compare against."""
+    ns = 4096
+    counts = rng.integers(0, 4, size=ns).astype(np.int32)
+    ends = jnp.asarray(np.cumsum(counts).astype(np.int32))
+    total = int(counts.sum())
+    nb = total + 8
+    starts = np.cumsum(counts) - counts
+    base = np.array([rng.integers(0, nb - int(c) + 1) for c in counts],
+                    np.int32)
+    delta = jnp.asarray(base - starts.astype(np.int32))
+    av = jnp.asarray(rng.normal(size=ns).astype(np.float32))
+    ac = jnp.asarray(rng.integers(0, 1 << 16, size=(ns, 2)), jnp.int32)
+    bv = jnp.asarray(rng.normal(size=nb).astype(np.float32))
+    bc = jnp.asarray(rng.integers(0, 1 << 16, size=(nb, 2)), jnp.int32)
+    merge = lambda x, y: x * y  # noqa: E731
+
+    def run_once():
+        return registry.dispatch("coo_expand", ends, delta, av, ac, bv, bc,
+                                 backend=registry.DENSE, merge=merge,
+                                 cap=total)
+
+    t, _ = paired(run_once, run_once, repeats=5, warmup=1)
+    row(f"kernels_coo_expand_ns{ns}_cap{total}", t * 1e6,
+        "fused segment-expand, dense tier")
+
+
+def _tune_all(rng, force: bool) -> None:
+    """One autotune pass over every tile-grid kernel's bench bucket,
+    driving the real dense impls (cheap shapes — the point is the cache
+    behaviour, not the tile choice)."""
+    a = jnp.asarray(rng.normal(size=(128, 64)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(64, 128)).astype(np.float32))
+    mask = jnp.ones((2, 2), bool)
+    autotune.best_tiles(
+        "masked_matmul", [a.shape, b.shape], "float32", registry.DENSE,
+        runner=lambda t: registry.dispatch(
+            "masked_matmul", a, b, mask, backend=registry.DENSE,
+            block_size=64, tiles=t),
+        force_retune=force)
+
+    vals = jnp.asarray(np.round(rng.normal(size=2048), 1)
+                       .astype(np.float32))
+    from repro.core.bloom import BloomParams, build
+    words = build(vals, BloomParams(log2_bits=12, num_hashes=2))
+    autotune.best_tiles(
+        "bloom_probe", [words.shape, vals.shape], "float32", registry.DENSE,
+        runner=lambda t: registry.dispatch(
+            "bloom_probe", words, vals, backend=registry.DENSE,
+            num_hashes=2, log2_bits=12, tiles=t),
+        force_retune=force)
+
+    ends = jnp.asarray(np.arange(1, 257, dtype=np.int32))
+    delta = jnp.zeros(256, jnp.int32)
+    av = jnp.asarray(rng.normal(size=256).astype(np.float32))
+    ac = jnp.asarray(rng.integers(0, 64, size=(256, 2)), jnp.int32)
+    autotune.best_tiles(
+        "coo_expand", [ends.shape, av.shape], "float32", registry.DENSE,
+        runner=lambda t: registry.dispatch(
+            "coo_expand", ends, delta, av, ac, av, ac, backend=registry.DENSE,
+            merge=lambda x, y: x + y, cap=256, tiles=t),
+        force_retune=force)
+
+
+def _bench_warm_start(rng) -> None:
+    import time
+    # a CI-restored fleet artifact must survive this run's saves: the
+    # forced pass below never does cache lookups, so without this load
+    # the first persist would clobber every entry other machines tuned
+    autotune.load_cache()
+    # pass 1: force a retune so the committed numbers always show real
+    # tuning effort (a CI-restored fleet artifact would otherwise make
+    # even the first pass free — which is the goal, but gates nothing)
+    autotune.reset_stats()
+    t0 = time.perf_counter()
+    _tune_all(rng, force=True)
+    cold_s = time.perf_counter() - t0
+    cold = autotune.tune_stats()
+    autotune.save_cache()
+
+    # pass 2: a fresh process booting with the artifact — zero trials
+    autotune.clear_cache()            # drop in-process state; disk survives
+    autotune.reset_stats()
+    autotune.load_cache()
+    t0 = time.perf_counter()
+    _tune_all(rng, force=False)
+    warm_s = time.perf_counter() - t0
+    warm = autotune.tune_stats()
+
+    row("kernels_autotune_cold_pass", cold_s * 1e6,
+        f"trials={cold['trials']} warm_hits={cold['warm_hits']}")
+    row("kernels_autotune_warm_pass", warm_s * 1e6,
+        f"trials={warm['trials']} warm_hits={warm['warm_hits']} "
+        f"artifact={autotune.cache_path()}")
+
+
+def run(rng) -> None:
+    _bench_sddmm(rng)
+    _bench_coo_expand(rng)
+    _bench_warm_start(rng)

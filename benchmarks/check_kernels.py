@@ -1,0 +1,115 @@
+"""Fused-kernel gate: validate a ``BENCH_kernels.json`` run.
+
+Usage:
+    python benchmarks/check_kernels.py results/BENCH_kernels.json \
+        [--min-speedup=1.3]
+
+The input is a ``benchmarks/run.py kernels_fused --json=...`` dump. The
+gate asserts the acceptance contract of the fused kernel tier:
+
+* **speedup**: at least one SDDMM shape shows the fused formulation
+  ``--min-speedup`` (default 1.3×) faster than materialize-then-aggregate
+  by paired wall timing;
+* **memory**: on every shape that clears the speedup bar, the fused
+  program's peak intermediate is strictly smaller than the unfused one
+  (the m×n product was never materialized);
+* **warm start**: the second autotune pass performed ZERO timing trials
+  and served every lookup from the artifact (``trials=0`` and
+  ``warm_hits>0`` on the warm row), while the forced cold pass actually
+  tuned (``trials>0`` — otherwise the warm proof is vacuous).
+
+Exit code 0 = all gates pass; 1 = violation (message on stdout).
+"""
+from __future__ import annotations
+
+import json
+import re
+import sys
+
+DEFAULT_MIN_SPEEDUP = 1.3
+
+
+def _fail(msg: str) -> int:
+    print(f"[check_kernels] FAIL: {msg}")
+    return 1
+
+
+def _derived_kv(derived: str) -> dict:
+    out = {}
+    for m in re.finditer(r"(\w+)=([^\s]+)", derived):
+        out[m.group(1)] = m.group(2)
+    return out
+
+
+def check(bench: dict, min_speedup: float = DEFAULT_MIN_SPEEDUP) -> int:
+    rows = {r["name"]: r for r in bench.get("rows", [])}
+
+    fused = [(name, _derived_kv(r["derived"])) for name, r in rows.items()
+             if name.startswith("kernels_sddmm_")
+             and name.endswith("_fused")]
+    if not fused:
+        return _fail("no kernels_sddmm_*_fused rows in the dump "
+                     "(did the kernels_fused bench run?)")
+    cleared = []
+    for name, kv in fused:
+        try:
+            speedup = float(kv["speedup"].rstrip("x"))
+        except (KeyError, ValueError):
+            return _fail(f"{name}: unparseable speedup in {kv}")
+        if speedup >= min_speedup:
+            cleared.append((name, kv, speedup))
+    if not cleared:
+        best = max(float(kv["speedup"].rstrip("x")) for _, kv in fused)
+        return _fail(f"no SDDMM shape reached {min_speedup}x "
+                     f"(best {best:.2f}x)")
+    for name, kv, speedup in cleared:
+        try:
+            pf, pu = int(kv["peak_fused"]), int(kv["peak_unfused"])
+        except (KeyError, ValueError):
+            return _fail(f"{name}: missing peak intermediate bytes in {kv}")
+        if pf >= pu:
+            return _fail(
+                f"{name}: fused peak intermediate {pf} B is not below "
+                f"unfused {pu} B — the m×n product leaked back in")
+        print(f"[check_kernels] {name}: {speedup:.2f}x, "
+              f"peak {pf} B vs {pu} B")
+
+    for which in ("cold", "warm"):
+        if f"kernels_autotune_{which}_pass" not in rows:
+            return _fail(f"missing kernels_autotune_{which}_pass row")
+    cold = _derived_kv(rows["kernels_autotune_cold_pass"]["derived"])
+    warm = _derived_kv(rows["kernels_autotune_warm_pass"]["derived"])
+    if int(cold.get("trials", 0)) <= 0:
+        return _fail("cold autotune pass performed no trials — the warm "
+                     "proof would be vacuous")
+    if int(warm.get("trials", -1)) != 0:
+        return _fail(f"warm autotune pass re-tuned: trials="
+                     f"{warm.get('trials')} (expected 0 — every bucket "
+                     "should come from the artifact)")
+    if int(warm.get("warm_hits", 0)) <= 0:
+        return _fail("warm autotune pass shows no cache hits")
+    print(f"[check_kernels] warm start: cold trials={cold['trials']}, "
+          f"warm trials=0, warm hits={warm['warm_hits']}")
+    print("[check_kernels] PASS")
+    return 0
+
+
+def main(argv) -> int:
+    if not argv or argv[0].startswith("-"):
+        print(__doc__)
+        return 2
+    path = argv[0]
+    min_speedup = DEFAULT_MIN_SPEEDUP
+    for a in argv[1:]:
+        if a.startswith("--min-speedup="):
+            min_speedup = float(a.split("=", 1)[1])
+        else:
+            print(f"unknown flag {a!r}")
+            return 2
+    with open(path) as f:
+        bench = json.load(f)
+    return check(bench, min_speedup)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -24,6 +24,9 @@ Prints ``name,us_per_call,derived`` CSV rows. Mapping to the paper:
     bench_cost_model    — (beyond paper) calibrated cost model: held-out
                           prediction accuracy vs analytic, plan-flip
                           gate, online-refit p50 overhead
+    bench_kernels_fused — (beyond paper) fused SDDMM+agg vs materialize-
+                          then-aggregate (wall + peak intermediate
+                          bytes) and the autotune warm-start proof
     bench_dist_comm     — (beyond paper) per-join jit vs whole-plan SPMD
                           (needs XLA_FLAGS=--xla_force_host_platform_
                           device_count=8 on CPU)
@@ -88,9 +91,9 @@ def main() -> None:
     from benchmarks import (
         bench_agg_gram, bench_cost_model, bench_cross_product,
         bench_dist_comm, bench_join_dims, bench_join_entries,
-        bench_join_single, bench_obs, bench_optimizer, bench_plan_cse,
-        bench_pnmf, bench_robust, bench_roofline, bench_select_lr,
-        bench_serve, bench_sparse_join,
+        bench_join_single, bench_kernels_fused, bench_obs, bench_optimizer,
+        bench_plan_cse, bench_pnmf, bench_robust, bench_roofline,
+        bench_select_lr, bench_serve, bench_sparse_join,
     )
     from benchmarks.common import ROWS, row
 
@@ -98,7 +101,7 @@ def main() -> None:
             bench_join_dims, bench_join_single, bench_join_entries,
             bench_pnmf, bench_plan_cse, bench_optimizer, bench_sparse_join,
             bench_serve, bench_obs, bench_robust, bench_cost_model,
-            bench_dist_comm, bench_roofline]
+            bench_kernels_fused, bench_dist_comm, bench_roofline]
     only, json_path = _parse_args(sys.argv[1:])
     print("name,us_per_call,derived")
     t0 = time.time()

@@ -207,13 +207,20 @@ class Session:
         least-recently-used first.
         """
         import os
+        # the calibrated cost model participates in backend choice
+        # (registry.planned_backend prices candidates per fitted device
+        # key), so its identity+version — and the kill switch — key the
+        # cache: a refit or a flipped REPRO_BACKEND_CHOICE replans
         key = (plan, self._env_version, self.mode, self.block_size,
                self.use_bloom, self.n_workers, self._mesh_key(),
-               os.environ.get("REPRO_KERNEL_BACKEND"))
+               os.environ.get("REPRO_KERNEL_BACKEND"),
+               os.environ.get("REPRO_BACKEND_CHOICE"),
+               self._costmodel_key())
         return self._plan_cache.get_or_create(
             key, lambda: planmod.build_plan(
                 plan, mode=self.mode, block_size=self.block_size,
-                use_bloom=self.use_bloom, n_workers=self.n_workers))
+                use_bloom=self.use_bloom, n_workers=self.n_workers,
+                cost_model=self.cost_model))
 
 
 # Bounds the per-session physical-plan cache (each dense-tier entry can pin
@@ -357,7 +364,8 @@ class Matrix:
             opt = optmod.optimize(self.plan, search=s.search, session=s)
             pplan = planmod.build_plan(
                 opt.plan, mode=s.mode, block_size=s.block_size,
-                use_bloom=s.use_bloom, n_workers=s.n_workers)
+                use_bloom=s.use_bloom, n_workers=s.n_workers,
+                cost_model=s.cost_model)
             planmod.PlanExecutor(s.env, mesh=s.mesh).run(pplan)
         tr.finish()
         return tr

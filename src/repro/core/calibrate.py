@@ -178,6 +178,16 @@ def features_from_plan(plan, nnz: Optional[float] = None
             n = node.shape[1] if len(node.shape) > 1 else 1
             frac = max(node.sparsity, _DENSIFY_FLOOR)
             dot += 2.0 * m * k * n * frac
+        elif node.kind == P.MASKED_AGG:
+            # fused SDDMM+reduce: gated contraction work, but no m×n
+            # intermediate ever hits memory — the bytes term already
+            # reflects that because the node's own output is tiny
+            sp = plan.node(node.children[0])
+            w = plan.node(node.children[1])
+            m, k = w.shape
+            n = sp.shape[1] if len(sp.shape) > 1 else 1
+            frac = max(sp.sparsity, _DENSIFY_FLOOR)
+            dot += 2.0 * m * k * n * frac
         elif node.kind == P.INVERSE:
             n = node.shape[0]
             dot += 2.0 * float(n) ** 3

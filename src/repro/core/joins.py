@@ -475,7 +475,8 @@ def join_sparse_device(a: BlockMatrix, b: BlockMatrix, pred: JoinPred,
         out = jdev.d2d_device(av, bv, pred.left, pred.right, merge.fn,
                               prof, cap,
                               cap_a=_side(av, prof.inducing_x),
-                              cap_b=_side(bv, prof.inducing_y))
+                              cap_b=_side(bv, prof.inducing_y),
+                              kernel_backend=kernel_backend)
     elif k is JoinKind.V2V:
         skip = prof.inducing_x or prof.inducing_y
         out = jdev.v2v_device(av, bv, merge.fn, prof, cap,

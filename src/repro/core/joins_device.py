@@ -73,6 +73,24 @@ def overflowed(coo: DeviceCOO) -> bool:
 # Shared machinery.
 # ---------------------------------------------------------------------------
 
+def _expand_meta(counts: jnp.ndarray, cap: int):
+    """Per-segment prefix sums + the slot validity mask, without the
+    expansion itself. Returns ``(ends, starts, valid, total)`` — the
+    metadata both the fused ``coo_expand`` kernel (which re-derives
+    segment ids from ``ends`` on the fly) and the repeat-based expansion
+    need."""
+    counts = counts.astype(jnp.int32)
+    ends = jnp.cumsum(counts, dtype=jnp.int32)
+    starts = ends - counts           # exclusive prefix sum
+    # int32 cumsum can wrap on a pathological total; a float32 shadow sum
+    # (exact below 2²⁴ > any device capacity) catches that as an overflow
+    total = jnp.where(
+        jnp.sum(counts, dtype=jnp.float32) > jnp.float32(cap),
+        _OVERFLOW_TOTAL, ends[-1])
+    valid = jnp.arange(cap, dtype=jnp.int32) < total
+    return ends, starts, valid, total
+
+
 def _segment_expand(counts: jnp.ndarray, cap: int):
     """Expand variable-size segments into ``cap`` static slots.
 
@@ -87,16 +105,9 @@ def _segment_expand(counts: jnp.ndarray, cap: int):
     same clamp the downstream gathers need anyway (masked by ``valid``).
     """
     counts = counts.astype(jnp.int32)
-    ends = jnp.cumsum(counts, dtype=jnp.int32)
-    starts = ends - counts           # exclusive prefix sum
-    # int32 cumsum can wrap on a pathological total; a float32 shadow sum
-    # (exact below 2²⁴ > any device capacity) catches that as an overflow
-    total = jnp.where(
-        jnp.sum(counts, dtype=jnp.float32) > jnp.float32(cap),
-        _OVERFLOW_TOTAL, ends[-1])
+    ends, starts, valid, total = _expand_meta(counts, cap)
     seg = jnp.repeat(jnp.arange(counts.shape[0], dtype=jnp.int32), counts,
                      total_repeat_length=cap)
-    valid = jnp.arange(cap, dtype=jnp.int32) < total
     return seg, starts, valid, total
 
 
@@ -176,15 +187,18 @@ def _finish(idx: jnp.ndarray, vals: jnp.ndarray, valid: jnp.ndarray,
 def d2d_device(a: jnp.ndarray, b: jnp.ndarray, left: Field, right: Field,
                merge: Callable, prof: SparsityProfile, cap: int, *,
                cap_a: Optional[int] = None,
-               cap_b: Optional[int] = None) -> DeviceCOO:
+               cap_b: Optional[int] = None,
+               kernel_backend: Optional[str] = None) -> DeviceCOO:
     """Single-dimension join (§4.4) as segment-based gathers.
 
     Replaces the host tier's Python per-key expansion loop. Both entry
     sets compact (row-major, so entries stay grouped by join key) into
-    static side buffers; per-key cartesian-product sizes expand via
-    ``_segment_expand``; two gathers fetch the operands. Output order 3:
+    static side buffers; per-key cartesian-product sizes expand through
+    the fused ``coo_expand`` registry kernel (segment ids + operand /
+    coordinate gathers + merge in one pass). Output order 3:
     (key, other_A, other_B), D1-first layout.
     """
+    from repro.kernels import registry
     aa = a if left is Field.RID else a.T
     bb = b if right is Field.RID else b.T
     d1 = min(aa.shape[0], bb.shape[0])  # inner join on the key domain
@@ -199,7 +213,7 @@ def d2d_device(a: jnp.ndarray, b: jnp.ndarray, left: Field, right: Field,
     cnt_b = jnp.sum(live_b, axis=1, dtype=jnp.int32)   # entries per key
     b_starts = jnp.cumsum(cnt_b, dtype=jnp.int32) - cnt_b
     # pre-gather coordinates and values into the compacted (nnz-sized)
-    # buffers: the cap-sized expansion gathers below then read from small,
+    # buffers: the kernel's cap-sized expansion then reads from small,
     # cache-resident arrays instead of the full m·n matrices
     cdt = _coord_dtype(d1, d2, d3)
     key_a = idx_a // d2
@@ -212,12 +226,11 @@ def d2d_device(a: jnp.ndarray, b: jnp.ndarray, left: Field, right: Field,
     # no variable-divisor div/mod; the emitted order still matches the
     # host tier (keys ascending, row-major within a key)
     counts = jnp.where(slot_a, cnt_b[key_a], 0)
-    sa, starts, valid, total = _segment_expand(counts, cap)
+    ends, starts, valid, total = _expand_meta(counts, cap)
     delta = b_starts[key_a] - starts  # B-run base − own segment start
-    t = jnp.arange(cap, dtype=jnp.int32)
-    sb = jnp.clip(t + delta[sa], 0, cap_b - 1)
-    vals = merge(av_c[sa], bv_c[sb])
-    idx = jnp.stack([kc_a[sa], cc_a[sa], col_b[sb]], axis=1)
+    idx, vals = registry.dispatch(
+        "coo_expand", ends, delta, av_c, jnp.stack([kc_a, cc_a], axis=1),
+        bv_c, col_b[:, None], backend=kernel_backend, merge=merge, cap=cap)
     total = jnp.where((na > cap_a) | (nb_n > cap_b), _OVERFLOW_TOTAL,
                       total)
     return _finish(idx, vals, valid, total)
@@ -263,20 +276,21 @@ def v2v_device(a: jnp.ndarray, b: jnp.ndarray, merge: Callable,
     hi = jnp.searchsorted(skey, avc, side="right").astype(jnp.int32)
     counts = jnp.where(slot_a, hi - lo, 0)
     # pre-gather output coordinates (and values) into nnz-sized sorted
-    # buffers so the cap-sized gathers read cache-resident arrays
+    # buffers so the fused expansion reads cache-resident arrays
     n = a.shape[1]
     cdt = _coord_dtype(a.shape[0], n, p, q)
     arow, acol = (idx_a // n).astype(cdt), (idx_a % n).astype(cdt)
     bsorted = idx_b[order_b]
     brow, bcol = (bsorted // q).astype(cdt), (bsorted % q).astype(cdt)
-    sa, starts, valid, total = _segment_expand(counts, cap)
+    ends, starts, valid, total = _expand_meta(counts, cap)
     delta = lo - starts               # match-run base − own segment start
-    bpos = jnp.clip(jnp.arange(cap, dtype=jnp.int32) + delta[sa],
-                    0, cap_b - 1)
-    # skey[bpos] IS the matched B value (exact equality join), so only
-    # the A side needs a value gather
-    vals = merge(avc[sa], skey[bpos])
-    idx = jnp.stack([arow[sa], acol[sa], brow[bpos], bcol[bpos]], axis=1)
+    # skey IS the matched B value buffer (exact equality join), so only
+    # the A side needs a separate value buffer
+    from repro.kernels import registry
+    idx, vals = registry.dispatch(
+        "coo_expand", ends, delta, avc, jnp.stack([arow, acol], axis=1),
+        skey, jnp.stack([brow, bcol], axis=1), backend=kernel_backend,
+        merge=merge, cap=cap)
     total = jnp.where((na > cap_a) | (nb > cap_b), _OVERFLOW_TOTAL, total)
     return _finish(idx, vals, valid, total)
 

@@ -1,12 +1,17 @@
-"""Block-size autotuner for registry kernels.
+"""Fleet-shared block-size autotuner for registry kernels.
 
-Entries are keyed by ``(kernel, shape-bucket, dtype, backend)`` — shapes are
-bucketed to the next power of two per dimension so one timing run covers a
-neighborhood of problem sizes instead of every exact shape. Results live in
-an in-process dict backed by an on-disk JSON cache so tuning survives
-process restarts (and can be shipped with a deployment).
+Entries are keyed by ``(kernel, shape-bucket, dtype, backend, device
+kind)`` — shapes are bucketed to the next power of two per dimension so
+one timing run covers a neighborhood of problem sizes instead of every
+exact shape, and the device-kind segment makes one artifact safely
+mergeable across heterogeneous machines: tiles tuned on an H100 never
+serve a TPU pod or a CPU runner. Results live in an in-process dict
+backed by an on-disk JSON cache so tuning survives process restarts —
+and, merged across CI runs and deployments, becomes a *fleet-shared
+warm-start artifact*: a process that boots with the artifact performs
+zero tuning trials on covered buckets (``tune_stats()`` proves it).
 
-Two entry points:
+Three entry points:
 
 * ``best_tiles`` — full lookup: in-process cache → disk cache → run the
   timing search over the kernel's tile grid (when a ``runner`` is given) →
@@ -15,10 +20,18 @@ Two entry points:
   the default tiles are returned and nothing is cached.
 * ``cached_tiles`` — cache-only lookup used by ``registry.dispatch`` on the
   hot path: never times, returns None on miss.
+* ``merge_files`` / the ``merge`` CLI — combine artifacts from many
+  machines/runs into one (later inputs win on key collisions; mismatched
+  schema versions are rejected, not silently dropped)::
+
+      python -m repro.kernels.autotune merge a.json b.json -o out.json
 
 Cache invalidation: the JSON schema is versioned (``_schema``); bumping
 ``_SCHEMA`` orphans old files. Deleting the file (or pointing
-``REPRO_AUTOTUNE_CACHE`` elsewhere) retunes from scratch.
+``REPRO_AUTOTUNE_CACHE`` elsewhere) retunes from scratch. Writers are
+concurrency-tolerant: every save/merge writes a temp file in the target
+directory and ``os.replace``s it, so a reader never observes a torn file
+and the last writer wins whole-file.
 """
 from __future__ import annotations
 
@@ -29,10 +42,29 @@ from typing import Callable, Dict, Optional, Sequence, Tuple
 
 Tiles = Dict[str, int]
 
-_SCHEMA = 1
+# schema 2: the cache key grew a device-kind segment (fleet merging);
+# schema-1 files are orphaned wholesale — their keys are ambiguous
+# across machines, which is exactly what the segment exists to fix
+_SCHEMA = 2
 _CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
 _CACHE: Dict[str, Tiles] = {}
 _DISK_LOADED_FROM: Optional[str] = None
+_DEVICE_KIND: Optional[str] = None
+
+# tuning-effort accounting: ``trials`` counts kernel invocations made by
+# the timing search (warmup/rejection + timed samples); ``warm_hits``
+# counts lookups served from the cache. A server booting with a complete
+# fleet artifact shows trials == 0 — the warm-start acceptance proof.
+_STATS = {"trials": 0, "warm_hits": 0}
+
+
+def tune_stats() -> Dict[str, int]:
+    return dict(_STATS)
+
+
+def reset_stats() -> None:
+    _STATS["trials"] = 0
+    _STATS["warm_hits"] = 0
 
 
 def cache_path() -> str:
@@ -40,6 +72,23 @@ def cache_path() -> str:
     # convention; deployments point REPRO_AUTOTUNE_CACHE at a shared file
     return os.environ.get(_CACHE_ENV,
                           os.path.join("results", "autotune.json"))
+
+
+def device_kind() -> str:
+    """``platform:device_kind`` of the first local device — the artifact
+    key segment that keeps per-machine tiles from cross-serving. Memoized
+    per process (jax.devices() is not free); '|' is the key delimiter so
+    it is scrubbed from free-form device-kind strings."""
+    global _DEVICE_KIND
+    if _DEVICE_KIND is None:
+        try:
+            import jax
+            d = jax.devices()[0]
+            kind = f"{d.platform}:{getattr(d, 'device_kind', 'unknown')}"
+        except Exception:
+            kind = "cpu:unknown"
+        _DEVICE_KIND = kind.replace("|", "/").replace(" ", "_")
+    return _DEVICE_KIND
 
 
 def shape_bucket(shapes: Sequence[Sequence[int]]) -> Tuple[Tuple[int, ...],
@@ -55,7 +104,7 @@ def shape_bucket(shapes: Sequence[Sequence[int]]) -> Tuple[Tuple[int, ...],
 def cache_key(kernel: str, shapes: Sequence[Sequence[int]], dtype: str,
               backend: str) -> str:
     bucket = "x".join(",".join(map(str, s)) for s in shape_bucket(shapes))
-    return f"{kernel}|{bucket}|{dtype}|{backend}"
+    return f"{kernel}|{bucket}|{dtype}|{backend}|{device_kind()}"
 
 
 # ---------------------------------------------------------------------------
@@ -81,15 +130,20 @@ def load_cache(path: Optional[str] = None) -> Dict[str, Tiles]:
     return _CACHE
 
 
-def save_cache(path: Optional[str] = None) -> str:
-    path = path or cache_path()
+def _write_atomic(path: str, entries: Dict[str, Tiles]) -> str:
+    """Temp-in-target-dir + ``os.replace``: concurrent writers race to
+    whole-file wins, readers never see a torn JSON."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    tmp = path + ".tmp"
+    tmp = f"{path}.{os.getpid()}.tmp"
     with open(tmp, "w") as f:
-        json.dump({"_schema": _SCHEMA, "entries": _CACHE}, f, indent=1,
+        json.dump({"_schema": _SCHEMA, "entries": entries}, f, indent=1,
                   sort_keys=True)
     os.replace(tmp, path)
     return path
+
+
+def save_cache(path: Optional[str] = None) -> str:
+    return _write_atomic(path or cache_path(), _CACHE)
 
 
 def clear_cache(in_process_only: bool = True) -> None:
@@ -103,6 +157,27 @@ def clear_cache(in_process_only: bool = True) -> None:
             pass
 
 
+def merge_files(paths: Sequence[str], out: str) -> Tuple[str, int]:
+    """Merge many autotune artifacts into ``out`` (the fleet CI step).
+
+    Every input must carry the current ``_schema`` — a version mismatch
+    raises instead of silently shipping keys the reader would ignore (or
+    worse, misread). Later inputs win on key collisions, so callers order
+    inputs oldest→newest. Returns ``(out, n_entries)``.
+    """
+    merged: Dict[str, Tiles] = {}
+    for p in paths:
+        with open(p) as f:
+            blob = json.load(f)
+        if blob.get("_schema") != _SCHEMA:
+            raise ValueError(
+                f"{p}: schema {blob.get('_schema')!r} != {_SCHEMA} — "
+                f"refusing to merge across schema versions")
+        for k, v in blob.get("entries", {}).items():
+            merged[k] = {str(n): int(b) for n, b in v.items()}
+    return _write_atomic(out, merged), len(merged)
+
+
 # ---------------------------------------------------------------------------
 # Lookup / search.
 # ---------------------------------------------------------------------------
@@ -114,7 +189,10 @@ def cached_tiles(kernel: str, shapes: Sequence[Sequence[int]], dtype: str,
     if key not in _CACHE and _DISK_LOADED_FROM != cache_path():
         load_cache()
     hit = _CACHE.get(key)
-    return dict(hit) if hit is not None else None  # callers may mutate
+    if hit is None:
+        return None
+    _STATS["warm_hits"] += 1
+    return dict(hit)  # callers may mutate
 
 
 def _timed_once(fn: Callable[[], object]) -> float:
@@ -194,6 +272,7 @@ def best_tiles(kernel: str, shapes: Sequence[Sequence[int]], dtype: str,
     for cand in cands:
         try:
             import jax
+            _STATS["trials"] += 1
             r = runner(cand)
             if r is not None:
                 jax.block_until_ready(r)
@@ -214,6 +293,7 @@ def best_tiles(kernel: str, shapes: Sequence[Sequence[int]], dtype: str,
         for i in order:
             cand = alive[i]
             try:
+                _STATS["trials"] += 1
                 samples[i].append(_timed_once(lambda: runner(cand)))
             except Exception:
                 samples[i].append(float("inf"))
@@ -233,3 +313,33 @@ def best_tiles(kernel: str, shapes: Sequence[Sequence[int]], dtype: str,
         except OSError:
             pass  # read-only FS: keep the in-process entry
     return dict(best)
+
+
+# ---------------------------------------------------------------------------
+# CLI: fleet artifact maintenance (CI merges per-run caches here).
+# ---------------------------------------------------------------------------
+
+def _main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(prog="python -m repro.kernels.autotune")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    mg = sub.add_parser("merge", help="merge autotune artifacts "
+                                      "(later inputs win; same schema only)")
+    mg.add_argument("inputs", nargs="+", help="artifact JSON files")
+    mg.add_argument("-o", "--out", required=True, help="merged output path")
+    args = ap.parse_args(argv)
+
+    if args.cmd == "merge":
+        try:
+            path, n = merge_files(args.inputs, args.out)
+        except (OSError, ValueError) as e:
+            print(f"[autotune] merge failed: {e}")
+            return 1
+        print(f"[autotune] merged {len(args.inputs)} artifacts "
+              f"→ {path} ({n} entries)")
+        return 0
+    return 2
+
+
+if __name__ == "__main__":
+    raise SystemExit(_main())

@@ -31,10 +31,26 @@ except ImportError:  # pragma: no cover - exercised only on stripped wheels
     pltpu = None
     _HAS_PALLAS = False
 
+try:  # The Triton lowering ships only in GPU-enabled jaxlibs; resolving it
+    # here (and nowhere else) is what lets the ``pallas-gpu`` backend tier
+    # register everywhere and capability-gate cleanly on CPU/TPU machines.
+    from jax.experimental.pallas import triton as pltriton  # noqa: F401
+    _HAS_TRITON = True
+except ImportError:
+    pltriton = None
+    _HAS_TRITON = False
+
 
 def has_pallas() -> bool:
     """True when ``jax.experimental.pallas`` imports on this installation."""
     return _HAS_PALLAS
+
+
+def has_triton() -> bool:
+    """True when the Pallas Triton (GPU) lowering imports here. Import
+    success alone does not make the backend *runnable* — the registry
+    additionally requires the default JAX backend to be a GPU."""
+    return _HAS_TRITON
 
 
 # ---------------------------------------------------------------------------

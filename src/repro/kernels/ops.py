@@ -21,10 +21,12 @@ import numpy as np
 from repro.kernels import ref as refmod
 from repro.kernels import registry
 from repro.kernels.bloom_probe import bloom_probe_pallas
+from repro.kernels.coo_join import coo_expand_pallas, coo_expand_ref
 from repro.kernels.masked_matmul import masked_matmul_pallas
 from repro.kernels.merge_join import (
     MODE_ALL, MODE_BOTH, MODE_X, MODE_Y, merge_join_pallas,
 )
+from repro.kernels.sddmm_agg import sddmm_agg_pallas, sddmm_agg_ref
 
 Tiles = Optional[Dict[str, int]]
 
@@ -102,6 +104,14 @@ def _masked_matmul_tpu(a, b, out_block_mask, *, block_size: int = 256,
                                  tiles=tiles, interpret=False)
 
 
+@registry.register("masked_matmul", registry.GPU)
+def _masked_matmul_gpu(a, b, out_block_mask, *, block_size: int = 256,
+                       tiles: Tiles = None):
+    # same compiled body: pallas_call picks the Triton lowering on GPU
+    return _masked_matmul_pallas(a, b, out_block_mask, block_size=block_size,
+                                 tiles=tiles, interpret=False)
+
+
 # ---------------------------------------------------------------------------
 # merge_join — block-skip overlay join (paper §4.3/§4.7).
 # ---------------------------------------------------------------------------
@@ -140,6 +150,14 @@ def _merge_join_interpret(a, b, mask_a, mask_b, *, merge: Callable,
 
 @registry.register("merge_join", registry.TPU)
 def _merge_join_tpu(a, b, mask_a, mask_b, *, merge: Callable,
+                    mode: int = MODE_ALL, block_size: int = 256,
+                    tiles: Tiles = None):
+    return _merge_join_pallas(a, b, mask_a, mask_b, merge=merge, mode=mode,
+                              block_size=block_size, interpret=False)
+
+
+@registry.register("merge_join", registry.GPU)
+def _merge_join_gpu(a, b, mask_a, mask_b, *, merge: Callable,
                     mode: int = MODE_ALL, block_size: int = 256,
                     tiles: Tiles = None):
     return _merge_join_pallas(a, b, mask_a, mask_b, merge=merge, mode=mode,
@@ -189,6 +207,116 @@ def _bloom_probe_tpu(words, vals, *, num_hashes: int = 3,
                                interpret=False)
 
 
+@registry.register("bloom_probe", registry.GPU)
+def _bloom_probe_gpu(words, vals, *, num_hashes: int = 3,
+                     log2_bits: int = 20, tiles: Tiles = None):
+    return _bloom_probe_pallas(words, vals, num_hashes=num_hashes,
+                               log2_bits=log2_bits, tiles=tiles,
+                               interpret=False)
+
+
+# ---------------------------------------------------------------------------
+# coo_expand — fused segment-expand + merge-intersect COO join inner loop
+# (paper §4.4–§4.5; the D2D/V2V expansion in core.joins_device).
+# ---------------------------------------------------------------------------
+
+_COO_TILE_GRID = ({"bt": 256}, {"bt": 512}, {"bt": 1024}, {"bt": 2048})
+_COO_DEFAULT_TILES = {"bt": 1024}
+
+
+@registry.register("coo_expand", registry.DENSE,
+                   tile_grid=_COO_TILE_GRID,
+                   default_tiles=_COO_DEFAULT_TILES)
+def _coo_expand_dense(ends, delta, a_vals, a_coords, b_vals, b_coords, *,
+                      merge: Callable, cap: int, tiles: Tiles = None):
+    return coo_expand_ref(ends, delta, a_vals, a_coords, b_vals, b_coords,
+                          merge, cap)
+
+
+def _coo_expand_pl(ends, delta, a_vals, a_coords, b_vals, b_coords, *,
+                   merge, cap, tiles, interpret):
+    bt = int((tiles or {}).get("bt", _COO_DEFAULT_TILES["bt"]))
+    bt = min(bt, max(cap, 1))
+    cap_p = -(-cap // bt) * bt  # pad to a whole tile; extra slots clamp
+    idx, val = coo_expand_pallas(ends, delta, a_vals, a_coords, b_vals,
+                                 b_coords, merge=merge, cap=cap_p, bt=bt,
+                                 interpret=interpret)
+    return idx[:cap], val[:cap]
+
+
+@registry.register("coo_expand", registry.INTERPRET)
+def _coo_expand_interpret(ends, delta, a_vals, a_coords, b_vals, b_coords,
+                          *, merge: Callable, cap: int, tiles: Tiles = None):
+    return _coo_expand_pl(ends, delta, a_vals, a_coords, b_vals, b_coords,
+                          merge=merge, cap=cap, tiles=tiles, interpret=True)
+
+
+@registry.register("coo_expand", registry.TPU)
+def _coo_expand_tpu(ends, delta, a_vals, a_coords, b_vals, b_coords, *,
+                    merge: Callable, cap: int, tiles: Tiles = None):
+    return _coo_expand_pl(ends, delta, a_vals, a_coords, b_vals, b_coords,
+                          merge=merge, cap=cap, tiles=tiles, interpret=False)
+
+
+@registry.register("coo_expand", registry.GPU)
+def _coo_expand_gpu(ends, delta, a_vals, a_coords, b_vals, b_coords, *,
+                    merge: Callable, cap: int, tiles: Tiles = None):
+    return _coo_expand_pl(ends, delta, a_vals, a_coords, b_vals, b_coords,
+                          merge=merge, cap=cap, tiles=tiles, interpret=False)
+
+
+# ---------------------------------------------------------------------------
+# sddmm_agg — fused SDDMM + SUM aggregation (paper §6, PNMF pipelines).
+# ---------------------------------------------------------------------------
+
+@registry.register("sddmm_agg", registry.DENSE)
+def _sddmm_agg_dense(sp, w, h, out_block_mask, *, dim: str,
+                     block_size: int = 256, tiles: Tiles = None):
+    # the factorized form needs no mask: sp's zeros already gate it
+    return sddmm_agg_ref(sp, w, h, dim)
+
+
+def _sddmm_agg_pl(sp, w, h, out_block_mask, *, dim, block_size, tiles,
+                  interpret):
+    m, n = sp.shape
+    bs = block_size
+    spp = _pad_to(sp, bs, bs)
+    wp = jnp.pad(w, ((0, spp.shape[0] - m), (0, 0)))
+    hp = jnp.pad(h, ((0, 0), (0, spp.shape[1] - n)))
+    gm, gn = spp.shape[0] // bs, spp.shape[1] // bs
+    mk = jnp.asarray(out_block_mask)
+    if mk.shape != (gm, gn):
+        mk = jnp.pad(mk, ((0, gm - mk.shape[0]), (0, gn - mk.shape[1])))
+    out = sddmm_agg_pallas(spp, wp, hp, mk, dim=dim, bm=bs, bn=bs,
+                           interpret=interpret)
+    if dim == "row":
+        return out[:m]
+    if dim == "col":
+        return out[:, :n]
+    return out
+
+
+@registry.register("sddmm_agg", registry.INTERPRET)
+def _sddmm_agg_interpret(sp, w, h, out_block_mask, *, dim: str,
+                         block_size: int = 256, tiles: Tiles = None):
+    return _sddmm_agg_pl(sp, w, h, out_block_mask, dim=dim,
+                         block_size=block_size, tiles=tiles, interpret=True)
+
+
+@registry.register("sddmm_agg", registry.TPU)
+def _sddmm_agg_tpu(sp, w, h, out_block_mask, *, dim: str,
+                   block_size: int = 256, tiles: Tiles = None):
+    return _sddmm_agg_pl(sp, w, h, out_block_mask, dim=dim,
+                         block_size=block_size, tiles=tiles, interpret=False)
+
+
+@registry.register("sddmm_agg", registry.GPU)
+def _sddmm_agg_gpu(sp, w, h, out_block_mask, *, dim: str,
+                   block_size: int = 256, tiles: Tiles = None):
+    return _sddmm_agg_pl(sp, w, h, out_block_mask, dim=dim,
+                         block_size=block_size, tiles=tiles, interpret=False)
+
+
 # ---------------------------------------------------------------------------
 # Public wrappers (historical API; ``force`` maps onto registry backends).
 # ---------------------------------------------------------------------------
@@ -224,3 +352,33 @@ def bloom_probe(words: jnp.ndarray, vals: jnp.ndarray, *,
                              backend=_force_to_backend(force),
                              num_hashes=num_hashes, log2_bits=log2_bits,
                              tiles=tiles)
+
+
+def coo_expand(ends: jnp.ndarray, delta: jnp.ndarray, a_vals: jnp.ndarray,
+               a_coords: jnp.ndarray, b_vals: jnp.ndarray,
+               b_coords: jnp.ndarray, *, merge: Callable, cap: int,
+               force: Optional[str] = None, tiles: Tiles = None):
+    """Fused COO join expansion → ``(idx [cap, ca+cb], val [cap])``.
+
+    Slots at or past the caller's true total hold clamped garbage and
+    must stay masked by the caller's ``valid`` vector (the
+    ``joins_device`` wrappers do this).
+    """
+    return registry.dispatch("coo_expand", ends, delta, a_vals, a_coords,
+                             b_vals, b_coords,
+                             backend=_force_to_backend(force),
+                             merge=merge, cap=cap, tiles=tiles)
+
+
+def sddmm_agg(sp: jnp.ndarray, w: jnp.ndarray, h: jnp.ndarray,
+              out_block_mask: jnp.ndarray, *, dim: str,
+              block_size: int = 256, force: Optional[str] = None,
+              tiles: Tiles = None) -> jnp.ndarray:
+    """SUM-aggregate ``sp ∘ (W×H)`` without materializing the product.
+
+    ``dim``: ``"row"`` → [m, 1], ``"col"`` → [1, n], ``"all"`` → [1, 1]
+    (the shapes ``core.executor.agg_dense`` produces for ``AggFn.SUM``).
+    """
+    return registry.dispatch("sddmm_agg", sp, w, h, out_block_mask,
+                             backend=_force_to_backend(force),
+                             dim=dim, block_size=block_size, tiles=tiles)

@@ -14,10 +14,16 @@ implementation at call time from runtime capability detection:
                          imports (CPU CI included).
 * ``pallas-tpu``       — the compiled Mosaic kernel; available when the
                          default JAX backend is TPU.
+* ``pallas-gpu``       — the same kernel body through the Triton lowering;
+                         available when ``jax.experimental.pallas.triton``
+                         imports AND the default JAX backend is GPU.
 
 Selection order: explicit ``backend=`` argument > ``REPRO_KERNEL_BACKEND``
-env var > ``pallas-tpu`` when on TPU > ``dense``. Interpret mode is opt-in
-(it validates kernel bodies; it is never the fastest CPU path).
+env var > the native accelerator tier (``pallas-tpu`` on TPU,
+``pallas-gpu`` on GPU) > ``dense``. Interpret mode is opt-in (it validates
+kernel bodies; it is never the fastest CPU path). With a calibrated cost
+model in hand, ``planned_backend`` can instead *price* the candidate
+backends per node (``REPRO_BACKEND_CHOICE=static`` disables that).
 
 Registering a new kernel:
 
@@ -51,9 +57,22 @@ from repro.runtime import faults
 DENSE = "dense"
 INTERPRET = "pallas-interpret"
 TPU = "pallas-tpu"
-BACKENDS = (DENSE, INTERPRET, TPU)
+GPU = "pallas-gpu"
+BACKENDS = (DENSE, INTERPRET, TPU, GPU)
+
+# Degradation order per chosen backend: quarantine or failure walks DOWN
+# the capability ladder (gpu → tpu → dense) instead of jumping straight to
+# the oracle, so a machine with both accelerator tiers keeps its second
+# fastest path. Entries are filtered against the kernel's impls and this
+# process's available backends at dispatch time.
+_FALLBACK_ORDER = {
+    GPU: (TPU, DENSE),
+    TPU: (DENSE,),
+    INTERPRET: (DENSE,),
+}
 
 _BACKEND_ENV = "REPRO_KERNEL_BACKEND"
+_BACKEND_CHOICE_ENV = "REPRO_BACKEND_CHOICE"
 _AUTOTUNE_ENV = "REPRO_AUTOTUNE"
 _BREAKER_THRESHOLD_ENV = "REPRO_BREAKER_THRESHOLD"
 _BREAKER_COOLDOWN_ENV = "REPRO_BREAKER_COOLDOWN"
@@ -126,12 +145,21 @@ def kernels() -> Tuple[str, ...]:
 
 
 def available_backends() -> Tuple[str, ...]:
-    """Backends runnable on THIS process, by runtime capability detection."""
+    """Backends runnable on THIS process, by runtime capability detection.
+
+    ``pallas-gpu`` requires all three of: Pallas importing, the Triton
+    lowering importing (GPU-enabled jaxlibs only — see ``compat``), and
+    the default JAX backend actually being a GPU. On CPU/TPU machines the
+    tier simply never appears here, so it registers everywhere yet can
+    never be dispatched to by accident.
+    """
     out = [DENSE]
     if compat.has_pallas():
         out.append(INTERPRET)
         if jax.default_backend() == "tpu":
             out.append(TPU)
+        if compat.has_triton() and jax.default_backend() == "gpu":
+            out.append(GPU)
     return tuple(out)
 
 
@@ -152,8 +180,9 @@ def resolve_backend(name: str, backend: Optional[str] = None) -> str:
                 f"kernel {name!r} has no {choice!r} impl "
                 f"(has {spec.backends()})")
         return choice
-    if TPU in avail and TPU in spec.impls:
-        return TPU
+    for native in (TPU, GPU):  # at most one can be available
+        if native in avail and native in spec.impls:
+            return native
     if DENSE not in spec.impls:
         raise KeyError(
             f"kernel {name!r} has no {DENSE!r} impl (has {spec.backends()});"
@@ -161,17 +190,55 @@ def resolve_backend(name: str, backend: Optional[str] = None) -> str:
     return DENSE
 
 
-def planned_backend(name: str, backend: Optional[str] = None) -> str:
+def planned_backend(name: str, backend: Optional[str] = None, *,
+                    cost_model=None, features=None) -> str:
     """Resolve kernel ``name``'s backend at *plan time*.
 
     The physical planner (``repro.plan.builder``) annotates each
-    kernel-dispatching DAG node with the backend it will run on, using the
-    exact policy ``dispatch`` applies at call time (explicit arg >
-    ``REPRO_KERNEL_BACKEND`` > TPU capability > dense). Keeping this a
-    registry function guarantees plan annotations and runtime dispatch can
-    never disagree.
+    kernel-dispatching DAG node with the backend it will run on. The base
+    policy is exactly what ``dispatch`` applies at call time (explicit
+    arg > ``REPRO_KERNEL_BACKEND`` > native accelerator capability >
+    dense), so plan annotations and runtime dispatch can never disagree.
+
+    On top of that, when a calibrated ``cost_model``
+    (``repro.core.calibrate.CostModel``) is supplied — and neither an
+    explicit backend nor the env pin forces the choice — the candidate
+    backends this process can actually run are *priced*: each available
+    impl's predicted wall time comes from the coefficients fitted for its
+    ``calibrate.device_key(backend=...)`` key (the same per-backend keys
+    ``physical_cost`` blends), and the cheapest wins. The comparison only
+    engages when at least two candidates have fitted models — a one-sided
+    fit falls back to the static policy rather than letting an unpriced
+    backend win by default. ``REPRO_BACKEND_CHOICE=static`` is the kill
+    switch: cost-based choice is disabled fleet-wide, static policy only.
+
+    ``features`` is the per-node feature dict (``calibrate.FEATURES``
+    keys) describing the work the kernel will do; the builder supplies it
+    from the node's flop/byte annotations.
     """
-    return resolve_backend(name, backend)
+    static = resolve_backend(name, backend)
+    if backend or os.environ.get(_BACKEND_ENV):
+        return static  # an explicit pin always wins
+    if os.environ.get(_BACKEND_CHOICE_ENV, "").lower() == "static":
+        return static
+    if cost_model is None or features is None:
+        return static
+    spec = get(name)
+    avail = available_backends()
+    cands = [b for b in spec.backends()
+             if b in avail and b != INTERPRET]  # interpret is never a plan
+    if len(cands) < 2:
+        return static
+    from repro.core import calibrate
+    priced = []
+    for b in cands:
+        dev = calibrate.device_key(backend=b)
+        if cost_model.model_for(dev) is None:
+            continue
+        priced.append((float(cost_model.predict(features, device=dev)), b))
+    if len(priced) < 2:
+        return static
+    return min(priced)[1]
 
 
 class CircuitBreaker:
@@ -293,35 +360,60 @@ def dispatch(name: str, *args: Any, backend: Optional[str] = None,
     """
     spec = get(name)
     chosen = resolve_backend(name, backend)
-    if chosen != DENSE and DENSE in spec.impls and BREAKER.quarantined(chosen):
+    avail = available_backends()
+    # the degradation chain: chosen backend first, then its capability-
+    # ordered fallbacks (gpu → tpu → dense) restricted to impls this
+    # kernel has and backends this process can run
+    chain = [chosen] + [fb for fb in _FALLBACK_ORDER.get(chosen, ())
+                        if fb in spec.impls and (fb == DENSE or fb in avail)]
+    # a quarantined head is skipped outright — but never the last resort:
+    # with nothing left to degrade to, the quarantined backend still runs
+    while len(chain) > 1 and chain[0] != DENSE \
+            and BREAKER.quarantined(chain[0]):
         from repro.obs.metrics import REGISTRY
         REGISTRY.counter("kernel_dispatch_quarantined",
-                         backend=chosen).inc()
-        chosen = DENSE
+                         backend=chain[0]).inc()
+        chain = chain[1:]
     if tiles is None and _autotune_enabled():
         from repro.kernels import autotune
         tiles = autotune.cached_tiles(
-            name, _arg_shapes(args), _arg_dtype(args), chosen)
-    if chosen == DENSE:
-        faults.check("kernel_dispatch", kernel=name, backend=chosen)
-        return spec.impls[chosen](*args, tiles=tiles, **kw)
-    try:
-        faults.check("kernel_dispatch", kernel=name, backend=chosen)
-        out = spec.impls[chosen](*args, tiles=tiles, **kw)
-    except Exception:
-        # deliberate containment, not a swallow: the failure is counted,
-        # feeds the breaker, and execution degrades to the dense oracle
-        # for this call (FaultInjected included — that is how chaos runs
-        # drive the quarantine path)
-        BREAKER.record_failure(chosen)
-        if DENSE not in spec.impls:
-            raise
-        from repro.obs.metrics import REGISTRY
-        REGISTRY.counter("kernel_dispatch_fallbacks",
-                         backend=chosen).inc()
-        return spec.impls[DENSE](*args, tiles=None, **kw)
-    BREAKER.record_success(chosen)
-    return out
+            name, _arg_shapes(args), _arg_dtype(args), chain[0])
+    for pos, b in enumerate(chain):
+        last = pos == len(chain) - 1
+        fallback = pos > 0
+        if fallback and not last and b != DENSE and BREAKER.quarantined(b):
+            from repro.obs.metrics import REGISTRY
+            REGISTRY.counter("kernel_dispatch_quarantined",
+                             backend=b).inc()
+            continue
+        # fault injection applies to the *chosen* dispatch only: the
+        # fallback hops are the containment path chaos runs exist to
+        # exercise, so they run clean (and with default tiles)
+        run_tiles = tiles if not fallback else None
+        if b == DENSE:
+            if not fallback:
+                faults.check("kernel_dispatch", kernel=name, backend=b)
+            return spec.impls[b](*args, tiles=run_tiles, **kw)
+        try:
+            if not fallback:
+                faults.check("kernel_dispatch", kernel=name, backend=b)
+            out = spec.impls[b](*args, tiles=run_tiles, **kw)
+        except Exception:
+            # deliberate containment, not a swallow: the failure is
+            # counted, feeds the breaker, and execution degrades one hop
+            # down the chain (FaultInjected included — that is how chaos
+            # runs drive the quarantine path)
+            BREAKER.record_failure(b)
+            if last:
+                raise
+            from repro.obs.metrics import REGISTRY
+            REGISTRY.counter("kernel_dispatch_fallbacks",
+                             backend=b).inc()
+            continue
+        BREAKER.record_success(b)
+        return out
+    raise RuntimeError(  # pragma: no cover - chain always ends in a run
+        f"kernel {name!r}: no runnable backend in {chain}")
 
 
 def _autotune_enabled() -> bool:

@@ -1,0 +1,157 @@
+"""Fused SDDMM + aggregation Pallas kernel.
+
+The PNMF-style pipeline ``Agg(sp ∘ (W × H))`` (paper §6) previously ran in
+two materializing stages: a block-masked matmul producing the full masked
+m×n product, then a dense aggregation pass re-reading it. For SUM
+aggregation the product is only ever consumed by the reduction, so this
+kernel computes each unmasked (bm, bn) output tile of ``sp ∘ (W·H)``
+in-register and folds it straight into the (row / column / scalar)
+accumulator — the m×n masked product never exists in memory.
+
+Two implementations share the contract:
+
+* ``sddmm_agg_ref`` — the *factorized* dense oracle. Algebra, not tiling:
+  ``rowsum(sp ∘ (W·H)) = rowsum(W ∘ (sp·Hᵀ))`` (and the transposed
+  identity for columns), so even the reference path peaks at an m×k / k×n
+  intermediate instead of m×n. This is also the fast CPU path the
+  benchmark's ≥1.3× claim measures against materialize-then-aggregate.
+* ``sddmm_agg_pallas`` — the tiled kernel: grid over the output block
+  grid, the reduction axis innermost ("arbitrary"), ``pl.when`` zero-init
+  on the first reduction step and block-mask-gated accumulate — the same
+  revisiting-accumulator idiom as ``masked_matmul``.
+
+``dim`` is one of ``"row"`` (out [m, 1]), ``"col"`` (out [1, n]),
+``"all"`` (out [1, 1]) — matching ``core.executor.agg_dense``'s output
+shapes for ``AggFn.SUM``. Only SUM fuses: the other aggregates mask by
+*presence* (``v != 0``), which needs the materialized product.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import compat
+from repro.kernels.compat import pl
+
+DIMS = ("row", "col", "all")
+
+
+def sddmm_agg_ref(sp: jnp.ndarray, w: jnp.ndarray, h: jnp.ndarray,
+                  dim: str) -> jnp.ndarray:
+    """Factorized oracle: never forms the m×n product.
+
+    ``rowsum_j sp[i,j]·(W·H)[i,j] = Σ_k W[i,k]·(sp·Hᵀ)[i,k]`` — one
+    sp-shaped matmul down to the k-width panel, then an elementwise
+    reduce. Rounding differs from materialize-then-aggregate (different
+    summation order), so parity checks use tolerances.
+    """
+    if dim == "row":
+        return jnp.sum(w * (sp @ h.T), axis=1)[:, None]
+    if dim == "col":
+        return jnp.sum(h * (w.T @ sp), axis=0)[None, :]
+    if dim == "all":
+        return jnp.sum(w * (sp @ h.T)).reshape(1, 1)
+    raise ValueError(f"dim {dim!r} not in {DIMS}")
+
+
+def _row_kernel(mask_ref, sp_ref, w_ref, h_ref, out_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(mask_ref[0, 0])
+    def _accum():
+        s = sp_ref[...] * jnp.dot(w_ref[...], h_ref[...],
+                                  preferred_element_type=out_ref.dtype)
+        out_ref[...] += jnp.sum(s, axis=1, keepdims=True)
+
+
+def _col_kernel(mask_ref, sp_ref, w_ref, h_ref, out_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(mask_ref[0, 0])
+    def _accum():
+        s = sp_ref[...] * jnp.dot(w_ref[...], h_ref[...],
+                                  preferred_element_type=out_ref.dtype)
+        out_ref[...] += jnp.sum(s, axis=0, keepdims=True)
+
+
+def _all_kernel(mask_ref, sp_ref, w_ref, h_ref, out_ref):
+    @pl.when((pl.program_id(0) == 0) & (pl.program_id(1) == 0))
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(mask_ref[0, 0])
+    def _accum():
+        s = sp_ref[...] * jnp.dot(w_ref[...], h_ref[...],
+                                  preferred_element_type=out_ref.dtype)
+        out_ref[...] += jnp.sum(s).reshape(1, 1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("dim", "bm", "bn", "interpret"))
+def sddmm_agg_pallas(sp: jnp.ndarray, w: jnp.ndarray, h: jnp.ndarray,
+                     mask: jnp.ndarray, *, dim: str, bm: int = 256,
+                     bn: int = 256, interpret: bool = False) -> jnp.ndarray:
+    """SUM-aggregate ``sp ∘ (W·H)`` over masked tiles, fused.
+
+    Shapes: sp [M, N], w [M, K], h [K, N], mask [M/bm, N/bn] bool over the
+    output tile grid (M, N multiples of bm/bn — the registry wrapper
+    pads). K rides whole into each tile: it is the factor width (small by
+    construction in the PNMF pipeline), and keeping it unsplit leaves the
+    grid's sole revisiting axis the reduction axis.
+    """
+    m, n = sp.shape
+    k = w.shape[1]
+    assert w.shape[0] == m and h.shape == (k, n), (sp.shape, w.shape,
+                                                   h.shape)
+    assert m % bm == 0 and n % bn == 0, (sp.shape, bm, bn)
+    gm, gn = m // bm, n // bn
+    assert mask.shape == (gm, gn), (mask.shape, (gm, gn))
+    out_dtype = jnp.promote_types(sp.dtype, jnp.float32)
+
+    if dim == "row":
+        grid = (gm, gn)
+        kernel, out_shape, out_spec = _row_kernel, (m, 1), pl.BlockSpec(
+            (bm, 1), lambda i, j: (i, 0))
+        maps = dict(mask=lambda i, j: (i, j), sp=lambda i, j: (i, j),
+                    w=lambda i, j: (i, 0), h=lambda i, j: (0, j))
+        sem = ("parallel", "arbitrary")
+    elif dim == "col":
+        # transposed traversal: the row-reduction axis must be innermost
+        # so the (1, bn) accumulator is revisited only across it
+        grid = (gn, gm)
+        kernel, out_shape, out_spec = _col_kernel, (1, n), pl.BlockSpec(
+            (1, bn), lambda j, i: (0, j))
+        maps = dict(mask=lambda j, i: (i, j), sp=lambda j, i: (i, j),
+                    w=lambda j, i: (i, 0), h=lambda j, i: (0, j))
+        sem = ("parallel", "arbitrary")
+    elif dim == "all":
+        grid = (gm, gn)
+        kernel, out_shape, out_spec = _all_kernel, (1, 1), pl.BlockSpec(
+            (1, 1), lambda i, j: (0, 0))
+        maps = dict(mask=lambda i, j: (i, j), sp=lambda i, j: (i, j),
+                    w=lambda i, j: (i, 0), h=lambda i, j: (0, j))
+        sem = ("arbitrary", "arbitrary")
+    else:
+        raise ValueError(f"dim {dim!r} not in {DIMS}")
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), maps["mask"]),
+            pl.BlockSpec((bm, bn), maps["sp"]),
+            pl.BlockSpec((bm, k), maps["w"]),
+            pl.BlockSpec((k, bn), maps["h"]),
+        ],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct(out_shape, out_dtype),
+        interpret=interpret,
+        **compat.compiler_params_kwargs(dimension_semantics=sem),
+    )(mask, sp, w, h)
+    return out.astype(sp.dtype)

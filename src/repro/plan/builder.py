@@ -27,8 +27,8 @@ import jax
 from repro.core import cost as costmod
 from repro.core import partitioner as partmod
 from repro.core.expr import (
-    Agg, ElemWise, EWOp, Expr, Inverse, Join, Leaf, MatMul, MatScalar,
-    Select, Transpose, count_nodes,
+    Agg, AggDim, AggFn, ElemWise, EWOp, Expr, Inverse, Join, Leaf, MatMul,
+    MatScalar, Select, Transpose, count_nodes,
 )
 from repro.core.predicates import JoinKind
 from repro.plan import ops as P
@@ -64,13 +64,18 @@ class _Builder:
     def __init__(self, mode: str, block_size: int, use_bloom: bool,
                  kernel_backend: Optional[str], n_workers: int,
                  cost_only: bool = False,
-                 shared: Optional["SharedBuildState"] = None):
+                 shared: Optional["SharedBuildState"] = None,
+                 cost_model=None):
         self.mode = mode
         self.block_size = block_size
         self.use_bloom = use_bloom
         self.kernel_backend = kernel_backend
         self.n_workers = n_workers
         self.cost_only = cost_only
+        # calibrated per-backend cost model (core.calibrate.CostModel):
+        # when present, kernel-dispatching nodes are priced across the
+        # available backends instead of taking the static capability order
+        self.cost_model = cost_model
         # with a shared arena, lowering appends to the cross-query node
         # list and consults the cross-query memo: a subplan another query
         # already lowered hash-conses to the *same* shared node id
@@ -126,6 +131,9 @@ class _Builder:
                              costmod.node_flops(e),
                              jit_safe=_select_jit_safe(e))
         if isinstance(e, Agg):
+            fused = self._lower_masked_agg(e)
+            if fused is not None:
+                return fused
             return self.emit(P.AGG, e, (self.lower(e.x),), (e.fn, e.dim),
                              costmod.node_flops(e))
         if isinstance(e, Join):
@@ -154,11 +162,53 @@ class _Builder:
                     return self.emit(
                         P.MASKED_ELEMWISE, e, (sp, w, h), (e.op, flip),
                         flops, kernel="masked_matmul",
-                        backend=self._backend("masked_matmul"),
+                        backend=self._backend(
+                            "masked_matmul", flops=flops,
+                            size=float(e.size),
+                            nnz=sparse_side.nnz_est),
                         strategy="sddmm", meta={"flip": flip})
         return self.emit(P.ELEMWISE, e,
                          (self.lower(e.a), self.lower(e.b)), (e.op,),
                          costmod.node_flops(e))
+
+    def _lower_masked_agg(self, e: Agg) -> Optional[int]:
+        """Σ(sparse ∘ (W×H)) → one fused SDDMM+aggregation node.
+
+        The structural check runs BEFORE the child is lowered: lowering
+        the ElemWise first would leave an orphan MASKED_ELEMWISE node in
+        the DAG that the eager walk (which evaluates every node) would
+        execute — materializing exactly the m×n product the fusion
+        exists to avoid. Only SUM over ROW/COL/ALL factorizes
+        (``kernels.sddmm_agg``); everything else takes the generic
+        AGG-over-MASKED_ELEMWISE pair.
+        """
+        if (self.mode != "sparse" or e.fn is not AggFn.SUM
+                or e.dim not in (AggDim.ROW, AggDim.COL, AggDim.ALL)):
+            return None
+        x = e.x
+        if not (isinstance(x, ElemWise) and x.op is EWOp.MUL):
+            return None
+        for sparse_side, mm_side in ((x.a, x.b), (x.b, x.a)):
+            if (isinstance(mm_side, MatMul)
+                    and sparse_side.sparsity
+                    < MASKED_PATTERN_MAX_SPARSITY):
+                sp = self.lower(sparse_side)
+                w = self.lower(mm_side.a)
+                h = self.lower(mm_side.b)
+                # cost: the gated contraction + one pass over the live
+                # entries for the reduction — the m×n intermediate of the
+                # unfused pair never exists, in flops or bytes
+                flops = (costmod.node_flops(mm_side)
+                         * max(sparse_side.sparsity, 1e-3)
+                         + float(x.size))
+                return self.emit(
+                    P.MASKED_AGG, e, (sp, w, h), (e.fn, e.dim), flops,
+                    kernel="sddmm_agg",
+                    backend=self._backend(
+                        "sddmm_agg", flops=flops, size=float(e.size),
+                        nnz=sparse_side.nnz_est),
+                    strategy="sddmm-agg")
+        return None
 
     def _lower_join(self, e: Join) -> int:
         strategy = _strategy_for_join(e, self.mode, self.use_bloom)
@@ -167,8 +217,15 @@ class _Builder:
             kernel = "merge_join"
         elif strategy == costmod.BLOOM_SORTMERGE:
             kernel = "bloom_probe"
+        elif strategy in ("coo-group-join", costmod.SORTMERGE):
+            # the device COO tier's expansion loop dispatches the fused
+            # segment-expand kernel; annotate it so EXPLAIN shows the
+            # planned backend and the staged path threads it through
+            kernel = "coo_expand"
         if kernel is not None:
-            backend = self._backend(kernel)
+            backend = self._backend(kernel, flops=costmod.node_flops(e),
+                                    size=float(e.size),
+                                    nnz=min(e.a.nnz_est, e.b.nnz_est))
         partition = None
         if self.n_workers > 1 and not self.cost_only:
             partition = partmod.plan_join_static(
@@ -186,18 +243,36 @@ class _Builder:
             kernel=kernel, backend=backend, strategy=strategy,
             partition=partition)
 
-    def _backend(self, kernel: str) -> Optional[str]:
+    def _backend(self, kernel: str, flops: Optional[float] = None,
+                 size: Optional[float] = None,
+                 nnz: Optional[float] = None) -> Optional[str]:
         if self.cost_only:
             return None
         from repro.kernels import registry
-        return registry.planned_backend(kernel, self.kernel_backend)
+        features = None
+        if self.cost_model is not None and flops is not None:
+            # per-node feature vector in the calibrate.FEATURES schema so
+            # the fitted per-backend coefficients can price this dispatch
+            features = {
+                "dot_flops": float(flops),
+                "ew_flops": 0.0,
+                "bytes": 4.0 * float(size or 0.0),
+                "transcendentals": 0.0,
+                "comm_bytes": 0.0,
+                "nnz": float(nnz or 0.0),
+                "ops": 1.0,
+            }
+        return registry.planned_backend(kernel, self.kernel_backend,
+                                        cost_model=self.cost_model,
+                                        features=features)
 
 
 def build_plan(e: Expr, *, mode: str = "sparse", block_size: int = 256,
                use_bloom: bool = True,
                kernel_backend: Optional[str] = None,
                n_workers: Optional[int] = None,
-               cost_only: bool = False) -> P.PhysicalPlan:
+               cost_only: bool = False,
+               cost_model=None) -> P.PhysicalPlan:
     """Lower (already-optimized) logical plan ``e`` into a physical DAG.
 
     ``cost_only=True`` is the optimizer's dry-lowering mode: the DAG is
@@ -211,7 +286,7 @@ def build_plan(e: Expr, *, mode: str = "sparse", block_size: int = 256,
     if n_workers is None:
         n_workers = jax.device_count()
     b = _Builder(mode, block_size, use_bloom, kernel_backend, n_workers,
-                 cost_only=cost_only)
+                 cost_only=cost_only, cost_model=cost_model)
     with span("lower", mode=mode, cost_only=cost_only):
         root = b.lower(e)
     plan = P.PhysicalPlan(
@@ -269,7 +344,8 @@ class SharedLowering:
 
 
 def lower_shared(shared: SharedBuildState, e: Expr,
-                 kernel_backend: Optional[str] = None) -> SharedLowering:
+                 kernel_backend: Optional[str] = None,
+                 cost_model=None) -> SharedLowering:
     """Lower (already-optimized) ``e`` into the shared arena.
 
     Not thread-safe — the serving engine serializes arena access.
@@ -277,7 +353,8 @@ def lower_shared(shared: SharedBuildState, e: Expr,
     from repro.obs.trace import span
     base = len(shared.nodes)
     b = _Builder(shared.mode, shared.block_size, shared.use_bloom,
-                 kernel_backend, shared.n_workers, shared=shared)
+                 kernel_backend, shared.n_workers, shared=shared,
+                 cost_model=cost_model)
     with span("lower", mode=shared.mode, shared=True):
         root = b.lower(e)
     # reachable shared ids, ascending = children-first (emit ids increase)

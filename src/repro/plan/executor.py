@@ -56,12 +56,18 @@ from repro.core.executor import (
     agg_dense, as_matrix, dense_join_result, ew_values, leaf_value,
     select_dense,
 )
-from repro.core.expr import Agg, ElemWise, EWOp, Join, MatScalar, Select
+from repro.core.expr import (
+    Agg, AggDim, ElemWise, EWOp, Join, MatScalar, Select,
+)
 from repro.core.joins import COOTensor
 from repro.core.matrix import BlockMatrix
 from repro.plan import ops as P
 
 Result = Union[BlockMatrix, COOTensor]
+
+# kernel-facing spelling of the fusable aggregation dims (DIAG never fuses —
+# the builder only emits MASKED_AGG for these three)
+_AGG_DIM = {AggDim.ROW: "row", AggDim.COL: "col", AggDim.ALL: "all"}
 
 
 class PlanExecutor:
@@ -90,7 +96,7 @@ class PlanExecutor:
         self.metrics = metrics
         self.stats: Dict[str, int] = {
             "node_evals": 0, "node_reuses": 0, "matmuls": 0,
-            "masked_matmuls": 0, "joins": 0,
+            "masked_matmuls": 0, "masked_aggs": 0, "joins": 0,
             "staged": 0, "staged_spmd": 0, "staged_sparse": 0,
             "staged_sparse_spmd": 0, "sparse_fallbacks": 0,
             "sparse_overflows": 0, "blocks_skipped": 0, "blocks_total": 0,
@@ -165,6 +171,8 @@ class PlanExecutor:
             return BlockMatrix.from_dense(v, bs)
         if k == P.MASKED_ELEMWISE:
             return self._masked_elemwise(plan, node, args)
+        if k == P.MASKED_AGG:
+            return self._masked_agg(plan, node, args)
         if k == P.MATMUL:
             a, b = as_matrix(args[0]).value, as_matrix(args[1]).value
             self._bump("matmuls")
@@ -203,6 +211,21 @@ class PlanExecutor:
             v = jnp.where((num == 0) | (den == 0), 0.0,
                           num / jnp.where(den == 0, 1.0, den))
         return BlockMatrix(v, sp.block_mask, plan.block_size)
+
+    def _masked_agg(self, plan: P.PhysicalPlan, node: P.PhysicalNode,
+                    args: List[Result]) -> BlockMatrix:
+        """Fused Σ(sp ∘ (W×H)): the factorized kernel reduces in-register
+        and the m×n masked product never exists as a value."""
+        e: Agg = node.expr
+        sp = as_matrix(args[0])
+        w, h = as_matrix(args[1]), as_matrix(args[2])
+        from repro.kernels import registry
+        v = registry.dispatch(
+            "sddmm_agg", sp.value, w.value, h.value, sp.block_mask,
+            backend=node.backend, dim=_AGG_DIM[e.dim],
+            block_size=plan.block_size)
+        self._bump("masked_aggs")
+        return BlockMatrix.from_dense(v, plan.block_size)
 
     def _join(self, plan: P.PhysicalPlan, node: P.PhysicalNode,
               args: List[Result]) -> Result:
@@ -328,6 +351,7 @@ class PlanExecutor:
         # per-kind compute counters (the CSE evidence) stay meaningful
         self._bump("matmuls", plan.count(P.MATMUL))
         self._bump("masked_matmuls", plan.count(P.MASKED_ELEMWISE))
+        self._bump("masked_aggs", plan.count(P.MASKED_AGG))
         self._bump("joins", plan.count(P.JOIN))
         self._bump("blocks_skipped", skip_stats[0])
         self._bump("blocks_total", skip_stats[1])
@@ -465,6 +489,13 @@ def _stage_sparse(plan: P.PhysicalPlan, mesh=None):
         if gated and n.meta.get("mask") is not None:
             skipped += int(n.meta["mask"].size - n.meta["mask"].sum())
             total += int(n.meta["mask"].size)
+        if n.kind == P.MASKED_AGG and not n.meta.get("demote_dense"):
+            # the fused kernel's gate is the sparse child's mask (the
+            # node's own mask is the tiny aggregation output)
+            g = plan.node(n.children[0]).meta.get("mask")
+            if g is not None:
+                skipped += int(g.size - g.sum())
+                total += int(g.size)
     skip_stats = (skipped, total)
 
     constraint = None
@@ -527,7 +558,8 @@ def _stage_sparse(plan: P.PhysicalPlan, mesh=None):
         if k is JoinKind.D2D:
             return joinsdev.d2d_device(av, bv, e.pred.left, e.pred.right,
                                        e.merge.fn, prof, cap,
-                                       cap_a=ca, cap_b=cb)
+                                       cap_a=ca, cap_b=cb,
+                                       kernel_backend=node.backend)
         if k is JoinKind.V2V:
             return joinsdev.v2v_device(
                 av, bv, e.merge.fn, prof, cap, cap_a=ca, cap_b=cb,
@@ -541,6 +573,19 @@ def _stage_sparse(plan: P.PhysicalPlan, mesh=None):
             return joinsdev.v2d_device(av, bv, e.pred.right, e.merge.fn,
                                        prof, cap, cap_a=cb)
         raise ValueError(k)
+
+    def _masked_agg(node, sp, w, h):
+        e: Agg = node.expr
+        if node.meta.get("demote_dense"):
+            # mostly-live gate: the fused kernel buys nothing over XLA's
+            # own fusion of dot+mul+reduce — let the compiler have it
+            return agg_dense(sp * jnp.dot(w, h,
+                                          preferred_element_type=w.dtype),
+                             e.fn, e.dim)
+        gate = jnp.asarray(plan.node(node.children[0]).meta["mask"])
+        return registry.dispatch(
+            "sddmm_agg", sp, w, h, gate, backend=node.backend,
+            dim=_AGG_DIM[e.dim], block_size=bs)
 
     def _masked(node, sp, w, h):
         e: ElemWise = node.expr
@@ -576,6 +621,8 @@ def _stage_sparse(plan: P.PhysicalPlan, mesh=None):
                 v = ew_values(e.op, ch[0], ch[1])
             elif k == P.MASKED_ELEMWISE:
                 v = _masked(node, ch[0], ch[1], ch[2])
+            elif k == P.MASKED_AGG:
+                v = _masked_agg(node, ch[0], ch[1], ch[2])
             elif k == P.MATMUL:
                 v = jnp.dot(ch[0], ch[1],
                             preferred_element_type=ch[0].dtype)

@@ -213,7 +213,10 @@ def _info(node: P.PhysicalNode, plan: P.PhysicalPlan,
         return _clip(MaskInfo(mask_ones(node.shape, bs), ch[0].nnz),
                      node.shape, bs)
 
-    if k == P.AGG:
+    if k in (P.AGG, P.MASKED_AGG):
+        # aggregation outputs (vectors / scalars) certify nothing useful
+        # at block granularity; the fused masked-agg's win is in the
+        # *intermediate* it never materializes, not in its tiny output
         return _clip(MaskInfo(mask_ones(node.shape, bs), np.inf),
                      node.shape, bs)
 
@@ -354,7 +357,7 @@ def annotate(plan: P.PhysicalPlan, env: Dict[str, BlockMatrix],
         node.meta["nnz_bound"] = info.nnz
         if node.kind == P.JOIN:
             _annotate_join(node, plan, infos, leaves)
-        elif node.kind == P.MASKED_ELEMWISE:
+        elif node.kind in (P.MASKED_ELEMWISE, P.MASKED_AGG):
             sp = infos[node.children[0]]
             from repro.plan.builder import MASKED_PATTERN_MAX_SPARSITY
             node.meta["demote_dense"] = \
@@ -395,9 +398,13 @@ def _annotate_join(node: P.PhysicalNode, plan: P.PhysicalPlan,
                 from repro.kernels import registry
                 node.backend = registry.planned_backend("bloom_probe")
         else:
-            node.kernel = None
-            node.backend = None  # no kernel: a stale backend would lie
-            # in EXPLAIN and steer the eager path's dispatch needlessly
+            # plain sortmerge still runs the fused segment-expand kernel
+            # on the device tier; keep the backend threaded so dispatch
+            # and EXPLAIN agree
+            node.kernel = "coo_expand"
+            if node.backend is None:
+                from repro.kernels import registry
+                node.backend = registry.planned_backend("coo_expand")
 
 
 def _side_caps(node: P.PhysicalNode, plan: P.PhysicalPlan, ch: list,

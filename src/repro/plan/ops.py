@@ -31,6 +31,7 @@ TRANSPOSE = "transpose"
 MATSCALAR = "matscalar"
 ELEMWISE = "elemwise"
 MASKED_ELEMWISE = "masked_elemwise"   # A ∘ (W×H) with sparse A (paper §6)
+MASKED_AGG = "masked_agg"             # Σ(A ∘ (W×H)) fused: no m×n product
 MATMUL = "matmul"
 INVERSE = "inverse"
 SELECT = "select"
@@ -71,6 +72,8 @@ class PhysicalNode:
     def label(self) -> str:
         if self.kind == MASKED_ELEMWISE:
             return f"MaskedElemWise[{self.expr._label()[9:-1]}]"
+        if self.kind == MASKED_AGG:
+            return f"MaskedAgg[{self.expr._label()[4:-1]}]"
         return self.expr._label()
 
 

@@ -212,6 +212,23 @@ def _node_table_rules(
             consider(BCAST, c + extra, (s_in,))
         return out
 
+    if k == P.MASKED_AGG:
+        # fused SDDMM+reduction: inputs align on one scheme (like
+        # MASKED_ELEMWISE) and the sharded-dim reduction is one
+        # output-sized collective (like AGG); the output replicates
+        for s in DOMAIN:
+            tot, ins = 0.0, []
+            for t in ct:
+                if s not in t:
+                    tot = _INF
+                    break
+                tot += t[s][0]
+                ins.append(s)
+            if tot < _INF:
+                extra = 0.0 if s == BCAST else _size(node)
+                consider(BCAST, tot + extra, tuple(ins))
+        return out
+
     if k == P.JOIN:
         e: Join = node.expr
         for sa in ct[0]:
@@ -298,7 +315,7 @@ def _own_comm(node: P.PhysicalNode, plan: P.PhysicalPlan,
         ch = [plan.node(c) for c in node.children]
         return costmod.join_comm_cost(
             e.pred, ins[0], ins[1], _size(ch[0]), _size(ch[1]), n)
-    if node.kind == P.AGG and ins and ins[0] != BCAST:
+    if node.kind in (P.AGG, P.MASKED_AGG) and ins and ins[0] != BCAST:
         return _size(node)
     if node.kind == P.INVERSE and ins and ins[0] != BCAST:
         return (n - 1) * _size(plan.node(node.children[0]))

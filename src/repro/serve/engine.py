@@ -210,6 +210,9 @@ class ServeEngine:
         "prewarm_failures", "deadline_exceeded",
         "exec_retries", "degraded_eager",
         "ledger_errors", "refit_crashes", "stragglers_suspected",
+        # kernel tier (PR 10): dispatches served from the fleet-shared
+        # autotune artifact without a single tuning trial
+        "autotune_warm_hits",
     )
 
     # errors the staged-execution retry loop must NOT retry: they are
@@ -314,6 +317,13 @@ class ServeEngine:
         self._straggler = StragglerDetector(list(worker_ids), window=16)
         self._next_worker = n_threads
         self._heartbeat_s = min(0.2, supervise_every_s)
+        # warm-start the kernel autotuner from the fleet artifact before
+        # any worker dispatches: buckets the artifact covers skip their
+        # tuning trials entirely, and the warm-hit delta is mirrored into
+        # ``serve_autotune_warm_hits`` as tickets complete
+        from repro.kernels import autotune
+        autotune.load_cache()
+        self._autotune_warm_seen = autotune.tune_stats()["warm_hits"]
         self._worker_batches: Dict[str, List[Ticket]] = {}
         self._workers: Dict[str, threading.Thread] = {}
         for wid in worker_ids:
@@ -470,6 +480,7 @@ class ServeEngine:
             return
         self._counters["errors" if error is not None
                        else "completed"].inc()
+        self._sync_autotune_metric()
         if isinstance(error, DeadlineExceeded):
             self._counters["deadline_exceeded"].inc()
         self._latency.observe(ticket.latency)
@@ -703,15 +714,17 @@ class ServeEngine:
                     plan = state.plans.get_or_create(
                         opt.plan, lambda: buildermod.build_plan(
                             opt.plan, mode=s.mode, block_size=s.block_size,
-                            use_bloom=s.use_bloom, n_workers=s.workers),
+                            use_bloom=s.use_bloom, n_workers=s.workers,
+                            cost_model=s.cost_model),
                         tenant=ticket.tenant)
                     return buildermod.SharedLowering(
                         plan=plan, root_shared_id=-1, reused_nodes=0,
                         new_nodes=plan.n_nodes)
                 def _lower():
                     with state.lock:
-                        lw = buildermod.lower_shared(state.shared,
-                                                     opt.plan)
+                        lw = buildermod.lower_shared(
+                            state.shared, opt.plan,
+                            cost_model=s.cost_model)
                     self._counters["inter_query_cse_nodes"].inc(
                         lw.reused_nodes)
                     self._arena_nodes.set(len(state.shared.nodes))
@@ -974,11 +987,23 @@ class ServeEngine:
         return out, ex
 
     # -- introspection --------------------------------------------------------
+    def _sync_autotune_metric(self) -> None:
+        """Mirror the autotuner's process-wide warm-hit count into this
+        engine's registry as a delta (many engines may share the
+        process; each only claims hits observed on its own watch)."""
+        from repro.kernels import autotune
+        seen = autotune.tune_stats()["warm_hits"]
+        delta = seen - self._autotune_warm_seen
+        if delta > 0:
+            self._autotune_warm_seen = seen
+            self._counters["autotune_warm_hits"].inc(delta)
+
     def snapshot(self) -> Dict[str, object]:
         """Stats snapshot: the legacy flat counter keys (now views over
         the metrics registry), the shared result-cache stats read
         atomically under that cache's lock, and serve-tier latency /
         queue-wait histogram summaries (p50/p90/p99 from buckets)."""
+        self._sync_autotune_metric()
         out: Dict[str, object] = {
             name: c.value for name, c in self._counters.items()}
         out["arena_nodes"] = int(self._arena_nodes.value)

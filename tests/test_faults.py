@@ -116,6 +116,20 @@ def test_match_filter_gates_by_attr():
     assert plan.stats()["kernel_dispatch"]["calls"] == 2
 
 
+def test_match_filter_scopes_pallas_gpu_dispatches():
+    """The chaos surface for the gpu kernel tier: a backend=pallas-gpu
+    filter fires only on gpu dispatches — dense and tpu dispatch attempts
+    pass clean and do not advance the schedule."""
+    plan = parse("kernel_dispatch:backend=pallas-gpu,every=2")
+    assert _fires(plan, "kernel_dispatch", 4, backend="pallas-gpu") \
+        == [False, True, False, True]
+    assert _fires(plan, "kernel_dispatch", 3, backend="dense") \
+        == [False, False, False]
+    assert _fires(plan, "kernel_dispatch", 2, backend="pallas-tpu") \
+        == [False, False]
+    assert plan.stats()["kernel_dispatch"] == {"calls": 4, "fires": 2}
+
+
 def test_kill_kind_is_base_exception():
     plan = parse("worker:kind=kill")
     with pytest.raises(WorkerKilled):

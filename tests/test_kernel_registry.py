@@ -28,13 +28,16 @@ def _isolated_autotune_cache(tmp_path, monkeypatch):
 # Registry surface.
 # ---------------------------------------------------------------------------
 
+ALL_KERNELS = ("masked_matmul", "merge_join", "bloom_probe",
+               "coo_expand", "sddmm_agg")
+
+
 def test_builtin_kernels_registered():
-    assert set(registry.kernels()) >= {"masked_matmul", "merge_join",
-                                       "bloom_probe"}
-    for name in ("masked_matmul", "merge_join", "bloom_probe"):
+    assert set(registry.kernels()) >= set(ALL_KERNELS)
+    for name in ALL_KERNELS:
         spec = registry.get(name)
         assert set(spec.backends()) == {registry.DENSE, registry.INTERPRET,
-                                        registry.TPU}
+                                        registry.TPU, registry.GPU}
 
 
 def test_capability_detection_cpu():
@@ -56,6 +59,161 @@ def test_unknown_backend_rejected():
         registry.resolve_backend("masked_matmul", "cuda-graphs")
     with pytest.raises(KeyError):
         registry.get("nonexistent_kernel")
+
+
+# ---------------------------------------------------------------------------
+# pallas-gpu tier: registers everywhere, capability-gates cleanly.
+# ---------------------------------------------------------------------------
+
+def _fake_gpu(monkeypatch):
+    """Pretend this process sits on a Triton-capable GPU host (the real
+    impls are never *executed* through this — only selection logic is)."""
+    monkeypatch.setattr(registry.compat, "has_triton", lambda: True)
+    monkeypatch.setattr(registry.jax, "default_backend", lambda: "gpu")
+
+
+def test_gpu_tier_gates_on_capability(monkeypatch):
+    # this container has no GPU: the tier registers but never resolves
+    assert registry.GPU not in registry.available_backends()
+    with pytest.raises(RuntimeError, match="unavailable"):
+        registry.resolve_backend("sddmm_agg", registry.GPU)
+    # a Triton import alone is not enough — the default backend must be gpu
+    monkeypatch.setattr(registry.compat, "has_triton", lambda: True)
+    assert registry.GPU not in registry.available_backends()
+    # with both, pallas-gpu becomes the native accelerator tier
+    _fake_gpu(monkeypatch)
+    assert registry.GPU in registry.available_backends()
+    for name in ALL_KERNELS:
+        assert registry.resolve_backend(name) == registry.GPU
+
+
+def test_gpu_quarantine_degrades_to_next_tier(monkeypatch, rng):
+    """A quarantined pallas-gpu backend is skipped outright: dispatch
+    degrades down the capability ladder without ever attempting it."""
+    _fake_gpu(monkeypatch)
+    registry.BREAKER.reset()
+    try:
+        for _ in range(registry.BREAKER.threshold):
+            registry.BREAKER.record_failure(registry.GPU)
+        assert registry.BREAKER.state(registry.GPU) == "open"
+        a = jnp.asarray(rng.normal(size=(32, 16)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(16, 32)), jnp.float32)
+        mask = jnp.ones((2, 2), bool)
+        # the gpu impl would fail if actually run on this CPU host — the
+        # quarantine skip is what keeps this dispatch alive
+        out = registry.dispatch("masked_matmul", a, b, mask,
+                                backend=registry.GPU, block_size=16)
+        want = registry.dispatch("masked_matmul", a, b, mask,
+                                 backend=registry.DENSE, block_size=16)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=1e-5)
+    finally:
+        registry.BREAKER.reset()
+
+
+def test_fallback_chain_walks_gpu_tpu_dense(monkeypatch):
+    """gpu → tpu → dense: a failing gpu impl lands on the NEXT tier, not
+    straight on the oracle (uses a scratch kernel so no real pallas body
+    has to fail on purpose)."""
+    monkeypatch.setattr(
+        registry, "available_backends",
+        lambda: (registry.DENSE, registry.INTERPRET, registry.TPU,
+                 registry.GPU))
+    name = "_test_chain_kernel"
+    registry.register(name, registry.DENSE)(lambda *a, tiles=None: "dense")
+    registry.register(name, registry.TPU)(lambda *a, tiles=None: "tpu")
+
+    def gpu_impl(*a, tiles=None):
+        raise RuntimeError("boom")
+
+    registry.register(name, registry.GPU)(gpu_impl)
+    registry.BREAKER.reset()
+    try:
+        assert registry.dispatch(name, backend=registry.GPU) == "tpu"
+        # the failure fed the breaker (one hop per failed dispatch)
+        assert registry.BREAKER._entry(registry.GPU)[0] == 1
+    finally:
+        registry.BREAKER.reset()
+        registry._REGISTRY.pop(name, None)
+
+
+def test_fault_injected_gpu_dispatch_degrades(monkeypatch):
+    """REPRO_FAULTS kernel_dispatch:backend=pallas-gpu scope-matches the
+    chosen gpu dispatch only; containment degrades it down the chain and
+    the fallback hop runs clean."""
+    from repro.runtime import faults
+    monkeypatch.setattr(
+        registry, "available_backends",
+        lambda: (registry.DENSE, registry.INTERPRET, registry.GPU))
+    name = "_test_fault_kernel"
+    registry.register(name, registry.DENSE)(lambda *a, tiles=None: "dense")
+    registry.register(name, registry.GPU)(lambda *a, tiles=None: "gpu")
+    registry.BREAKER.reset()
+    try:
+        with faults.inject("kernel_dispatch:backend=pallas-gpu"):
+            assert registry.dispatch(name, backend=registry.GPU) == "dense"
+            # dense dispatches never match the scope filter
+            assert registry.dispatch(name, backend=registry.DENSE) == "dense"
+        assert registry.dispatch(name, backend=registry.GPU) == "gpu"
+    finally:
+        registry.BREAKER.reset()
+        registry._REGISTRY.pop(name, None)
+
+
+# ---------------------------------------------------------------------------
+# planned_backend: cost-priced plan-time choice (+ kill switch).
+# ---------------------------------------------------------------------------
+
+class _StubModel:
+    version = "stub"
+
+    def __init__(self, prices):
+        self._prices = prices
+
+    def model_for(self, device):
+        return self._prices.get(device)
+
+    def predict(self, features, device=None):
+        return self._prices[device]
+
+
+def test_planned_backend_prices_candidates(monkeypatch):
+    from repro.core import calibrate
+    monkeypatch.setattr(
+        registry, "available_backends",
+        lambda: (registry.DENSE, registry.INTERPRET, registry.TPU))
+    feats = {k: 1.0 for k in calibrate.FEATURES}
+    dense_key = calibrate.device_key(backend=registry.DENSE)
+    tpu_key = calibrate.device_key(backend=registry.TPU)
+    # static policy would pick the native tier (pallas-tpu); the fitted
+    # model prices dense cheaper, so pricing overrides it
+    model = _StubModel({dense_key: 0.1, tpu_key: 2.0})
+    assert registry.planned_backend("sddmm_agg", cost_model=model,
+                                    features=feats) == registry.DENSE
+    flipped = _StubModel({dense_key: 2.0, tpu_key: 0.1})
+    assert registry.planned_backend("sddmm_agg", cost_model=flipped,
+                                    features=feats) == registry.TPU
+    # kill switch: fleet-wide revert to the static policy
+    monkeypatch.setenv("REPRO_BACKEND_CHOICE", "static")
+    assert registry.planned_backend("sddmm_agg", cost_model=model,
+                                    features=feats) == registry.TPU
+    monkeypatch.delenv("REPRO_BACKEND_CHOICE")
+    # an explicit pin always wins over pricing
+    assert registry.planned_backend("sddmm_agg", registry.DENSE,
+                                    cost_model=model,
+                                    features=feats) == registry.DENSE
+    # a one-sided fit must not let an unpriced backend win by default
+    lone = _StubModel({dense_key: 0.1})
+    assert registry.planned_backend("sddmm_agg", cost_model=lone,
+                                    features=feats) == registry.TPU
+
+
+def test_planned_backend_static_without_model():
+    # no model / no features → exactly the dispatch-time policy
+    assert registry.planned_backend("coo_expand") \
+        == registry.resolve_backend("coo_expand")
+    assert registry.planned_backend("coo_expand", features={"ops": 1.0}) \
+        == registry.resolve_backend("coo_expand")
 
 
 # ---------------------------------------------------------------------------
@@ -226,6 +384,104 @@ def test_autotune_disk_round_trip():
     hit = autotune.cached_tiles("bloom_probe", [(4096,)], "float32",
                                 registry.INTERPRET)
     assert hit == best, path
+
+
+def test_autotune_key_is_device_and_backend_scoped():
+    kind = autotune.device_kind()
+    assert "|" not in kind and " " not in kind  # scrubbed key segment
+    key = autotune.cache_key("k", [(64, 64)], "float32", registry.DENSE)
+    assert key.endswith(f"|{registry.DENSE}|{kind}")
+    # tiles tuned for one backend never serve another
+    assert key != autotune.cache_key("k", [(64, 64)], "float32",
+                                     registry.GPU)
+
+
+def test_autotune_stats_prove_warm_start():
+    """The fleet acceptance check: a covered bucket costs zero trials on
+    the second pass, and cache hits are visible as warm_hits."""
+    autotune.reset_stats()
+    args = ("masked_matmul", [(64, 32), (32, 64)], "float32",
+            registry.INTERPRET)
+    autotune.best_tiles(*args, runner=lambda t: None)
+    cold = autotune.tune_stats()
+    assert cold["trials"] > 0
+    # warm pass: served from cache, no new trials, one warm hit
+    autotune.best_tiles(*args, runner=lambda t: None)
+    warm = autotune.tune_stats()
+    assert warm["trials"] == cold["trials"]
+    assert warm["warm_hits"] == cold["warm_hits"] + 1
+    # and the same holds across a process "restart" via the disk artifact
+    autotune.save_cache()
+    autotune.clear_cache()
+    autotune.reset_stats()
+    autotune.load_cache()
+    autotune.best_tiles(*args, runner=lambda t: None)
+    assert autotune.tune_stats() == {"trials": 0, "warm_hits": 1}
+
+
+def test_autotune_save_is_write_temp_then_rename(tmp_path, monkeypatch):
+    """Concurrent-writer tolerance is pinned to the mechanism: saves go
+    through a pid-suffixed temp file in the target dir + os.replace, so a
+    racing reader can never observe a torn JSON."""
+    import os as osmod
+    target = tmp_path / "fleet" / "autotune.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(target))
+    replaced = []
+    real = osmod.replace
+
+    def spy(src, dst):
+        replaced.append((str(src), str(dst)))
+        assert osmod.path.exists(src)  # fully written before the swap
+        real(src, dst)
+
+    monkeypatch.setattr(autotune.os, "replace", spy)
+    autotune._CACHE["k|64|float32|dense|cpu:cpu"] = {"bk": 64}
+    autotune.save_cache()
+    (src, dst), = replaced
+    assert dst == str(target)
+    assert src == f"{target}.{osmod.getpid()}.tmp"
+    assert not osmod.path.exists(src)  # temp is gone, target is whole
+    import json
+    blob = json.load(open(target))
+    assert blob["_schema"] == autotune._SCHEMA
+    assert blob["entries"]["k|64|float32|dense|cpu:cpu"] == {"bk": 64}
+
+
+def _artifact(path, entries, schema=None):
+    import json
+    path.write_text(json.dumps(
+        {"_schema": autotune._SCHEMA if schema is None else schema,
+         "entries": entries}))
+    return str(path)
+
+
+def test_autotune_merge_later_wins_and_rejects_schema(tmp_path):
+    import json
+    a = _artifact(tmp_path / "a.json",
+                  {"k1|…|cpu": {"bk": 64}, "k2|…|cpu": {"bt": 256}})
+    b = _artifact(tmp_path / "b.json",
+                  {"k1|…|cpu": {"bk": 128}, "k3|…|gpu": {"bs": 4096}})
+    out = str(tmp_path / "merged.json")
+    path, n = autotune.merge_files([a, b], out)
+    assert (path, n) == (out, 3)
+    entries = json.load(open(out))["entries"]
+    assert entries["k1|…|cpu"] == {"bk": 128}  # later input wins
+    assert set(entries) == {"k1|…|cpu", "k2|…|cpu", "k3|…|gpu"}
+    # a schema-1 artifact (pre device-kind keys) must be refused loudly
+    old = _artifact(tmp_path / "old.json", {"k|64|f32|dense": {"bk": 64}},
+                    schema=1)
+    with pytest.raises(ValueError, match="schema"):
+        autotune.merge_files([a, old], str(tmp_path / "bad.json"))
+
+
+def test_autotune_merge_cli(tmp_path, capsys):
+    a = _artifact(tmp_path / "a.json", {"ka": {"bk": 64}})
+    b = _artifact(tmp_path / "b.json", {"kb": {"bt": 512}})
+    out = str(tmp_path / "m.json")
+    assert autotune._main(["merge", a, b, "-o", out]) == 0
+    assert "merged 2 artifacts" in capsys.readouterr().out
+    bad = _artifact(tmp_path / "bad.json", {"k": {"x": 1}}, schema=99)
+    assert autotune._main(["merge", a, bad, "-o", out]) == 1
 
 
 def test_autotuned_dispatch_reads_cache(rng, monkeypatch):
